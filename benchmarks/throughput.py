@@ -1,0 +1,141 @@
+"""Benchmark: paper Eqs. (1)-(3) and the §V scaling argument quantified -
+projecting every assigned LM architecture onto time-multiplexed BSS-2 tiles
+("rate-based stateless operation ... supports arbitrarily large model
+sizes", paper §V).
+
+For each architecture we count the analog-mappable parameter matmuls (per
+token), partition them into 128x512 signed tiles, and report:
+- tiles required / chips to hold the model resident,
+- VMM passes per token and the resulting tokens/s on 1 chip vs a
+  512-chip pod (time-multiplexed, Eq. 2 cycle time),
+- ASIC-only energy per token (Table-1 analog+digital+IO split).
+
+Also measures the *emulation* throughput of the analog matmul kernel on
+this host (CPU, interpret mode) - the number that matters for mock-mode
+training speed.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import configs
+from repro.core.energy import LayerWork, SystemModel
+from repro.core.hw import BSS2
+from repro.core.partition import plan_model, plan_tiles
+
+
+def analog_layer_shapes(cfg) -> list[tuple[int, int]]:
+    """(K, N) of every analog-mapped parameter matmul for ONE layer-stack
+    pass (per token).  Recurrence/norm/embedding stay digital (DESIGN §5.1)."""
+    d, hd = cfg.d_model, cfg.hd
+    shapes = []
+    for i in range(cfg.n_layers):
+        kind = cfg.layer_kind(i)
+        if kind in ("attn_mlp", "attn_moe"):
+            shapes += [
+                (d, cfg.n_heads * hd), (d, cfg.n_kv_heads * hd),
+                (d, cfg.n_kv_heads * hd), (cfg.n_heads * hd, d),
+            ]
+            if kind == "attn_mlp":
+                ff = cfg.moe_dense_d_ff or cfg.d_ff
+                n_m = 3 if cfg.act == "swiglu" else 2
+                shapes += [(d, ff)] * (n_m - 1) + [(ff, d)]
+            else:
+                n_m = 3 if cfg.act == "swiglu" else 2
+                # active experts only (top_k + shared)
+                k_act = cfg.top_k + cfg.n_shared_experts
+                shapes += [(d, cfg.moe_d_ff)] * (n_m - 1) * k_act
+                shapes += [(cfg.moe_d_ff, d)] * k_act
+        elif kind == "rwkv":
+            shapes += [(d, d)] * 5 + [(d, cfg.d_ff), (cfg.d_ff, d)]
+        elif kind == "mamba":
+            d_in = 2 * d
+            shapes += [(d, 2 * d_in + 2 * cfg.ssm_state + d_in // 64),
+                       (d_in, d)]
+    if cfg.attn_every:
+        for _ in range(cfg.n_layers // cfg.attn_every):
+            shapes += [(d, cfg.n_heads * hd), (d, cfg.n_kv_heads * hd),
+                       (d, cfg.n_kv_heads * hd), (cfg.n_heads * hd, d)]
+    shapes.append((d, cfg.vocab_size))
+    return shapes
+
+
+def project_arch(name: str, chips: int = 512) -> dict:
+    cfg = configs.get_arch(name)
+    shapes = analog_layer_shapes(cfg)
+    plan = plan_model(shapes)
+    # weights resident: chips needed to hold all tiles of the *total* model
+    total_shapes = analog_layer_shapes(cfg)
+    resident = plan_model(total_shapes)
+    layers = [LayerWork(k=k, n=n, passes_per_vector=2) for k, n in shapes]
+    m1 = SystemModel(chips=1, t_ctrl=0.0)
+    mp = SystemModel(chips=chips, t_ctrl=0.0)
+    t1 = m1.t_analog(layers) + m1.t_events(layers)
+    tp = mp.t_analog(layers) + mp.t_events(layers)
+    e_token = BSS2.asic_power_w * tp * chips
+    return {
+        "arch": name,
+        "analog_params(M)": plan["total_macs"] / 1e6,
+        "tiles": resident["total_tiles"],
+        "tile_util": resident["mean_utilization"],
+        "tok/s@1chip": 1.0 / t1,
+        f"tok/s@{chips}chip": 1.0 / tp,
+        "asic_mJ/token": e_token * 1e3,
+    }
+
+
+def emulation_throughput() -> dict:
+    """Host-side emulation speed of the faithful analog matmul (ref path)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.analog import AnalogConfig, analog_matmul
+    from repro.core.noise import NOISELESS
+
+    m, k, n = 256, 1024, 1024
+    a = jnp.round(jax.random.uniform(jax.random.PRNGKey(0), (m, k)) * 31)
+    w = jnp.round(jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 20)
+    cfg = AnalogConfig(noise=NOISELESS)
+    f = jax.jit(lambda a, w: analog_matmul(a, w, 0.02, None, None, cfg))
+    f(a, w).block_until_ready()
+    t0 = time.perf_counter()
+    iters = 20
+    for _ in range(iters):
+        f(a, w).block_until_ready()
+    dt = (time.perf_counter() - t0) / iters
+    return {
+        "shape": f"{m}x{k}x{n}",
+        "us_per_call": dt * 1e6,
+        "emulated_GOp/s": 2 * m * k * n / dt / 1e9,
+    }
+
+
+def main() -> None:
+    print("\n== Eq.(1)-(3) constants ==")
+    print(f"peak {BSS2.peak_ops/1e12:.2f} TOp/s | sustained "
+          f"{BSS2.sustained_ops/1e9:.1f} GOp/s | "
+          f"{BSS2.area_efficiency_top_s_mm2:.2f} TOp/(s mm^2)")
+
+    print("\n== §V scaling: assigned archs on time-multiplexed BSS-2 tiles "
+          "(batch 1, signed-split encoding) ==")
+    cols = None
+    for name in configs.ARCH_NAMES:
+        r = project_arch(name)
+        if cols is None:
+            cols = list(r)
+            print(" | ".join(f"{c:>18s}" for c in cols))
+        print(" | ".join(
+            f"{r[c]:>18.4g}" if not isinstance(r[c], str) else f"{r[c]:>18s}"
+            for c in cols
+        ))
+
+    e = emulation_throughput()
+    print("\n== host emulation throughput (faithful analog matmul, CPU) ==")
+    print(f"{e['shape']}: {e['us_per_call']:.0f} us/call "
+          f"({e['emulated_GOp/s']:.2f} emulated GOp/s)")
+
+
+if __name__ == "__main__":
+    main()

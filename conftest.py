@@ -1,0 +1,9 @@
+"""Ensure the repo root (for benchmarks/) and src/ are importable no matter
+how pytest is invoked."""
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (ROOT, os.path.join(ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,48 @@
+"""Train an LM with every parameter matmul on emulated BSS-2 analog tiles -
+the paper's §V claim ("arbitrarily large models by time-multiplexing analog
+tiles") exercised end-to-end with HIL/QAT training.
+
+    PYTHONPATH=src python examples/lm_analog_train.py \
+        --arch qwen3-moe-30b-a3b --steps 60
+
+Uses the smoke-size variant of the chosen architecture (full configs are a
+pod-scale job; see launch/dryrun.py for the 256/512-chip lowering).  Trains
+the same model twice - digital and analog_faithful - and compares loss
+curves: the analog run converges despite W6A5 quantization, saturating
+8-bit ADCs and fixed-pattern noise, which is the paper's §III-B result.
+"""
+import argparse
+
+import numpy as np
+
+from repro import configs
+from repro.launch.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b", choices=configs.ARCH_NAMES)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    a = ap.parse_args()
+
+    print(f"=== {a.arch} (smoke config), digital baseline ===")
+    dig = train_loop(a.arch, smoke=True, steps=a.steps, batch=a.batch,
+                     mode="digital", log_every=max(a.steps // 5, 1))
+    print(f"\n=== {a.arch} (smoke config), analog_faithful (HIL/QAT) ===")
+    ana = train_loop(a.arch, smoke=True, steps=a.steps, batch=a.batch,
+                     mode="analog_faithful", log_every=max(a.steps // 5, 1))
+
+    d0, d1 = np.mean(dig["losses"][:5]), np.mean(dig["losses"][-5:])
+    a0, a1 = np.mean(ana["losses"][:5]), np.mean(ana["losses"][-5:])
+    print("\n=== summary ===")
+    print(f"digital: {d0:.3f} -> {d1:.3f}")
+    print(f"analog:  {a0:.3f} -> {a1:.3f}")
+    print("analog training converges through the quantized, noisy, "
+          "saturating substrate (paper §III-B / Fig. 8)."
+          if a1 < 0.9 * a0 else
+          "WARNING: analog run did not converge - inspect noise config")
+
+
+if __name__ == "__main__":
+    main()

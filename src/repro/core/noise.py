@@ -1,0 +1,112 @@
+"""Statistical models of the BSS-2 analog imperfections.
+
+The paper trains "incorporating hardware-related constraints like
+fixed-pattern noise and limited dynamic range" (§III-B, mock mode).  We model
+three effects, with magnitudes parameterized and defaults taken from the
+BSS-2 characterization literature (Weis et al. 2020 [26]; Klein et al. 2021
+[22] report ~2 % relative synapse-gain spread and sub-LSB readout noise after
+calibration):
+
+1. **fixed-pattern synaptic gain** - per-synapse multiplicative deviation,
+   frozen per chip (seeded, reproducible).
+2. **fixed-pattern column offset** - per-(neuron, row-chunk) additive ADC
+   offset, frozen per chip.
+3. **temporal readout noise** - per-analog-pass additive noise on the
+   digitized membrane voltage (thermal + ADC sampling noise).
+
+Large-model memory note: a full per-synapse gain map doubles parameter
+memory; ``mode="rank1"`` factorizes it into per-row x per-column gains (the
+dominant physical terms are per-driver and per-neuron mismatch), which costs
+O(K+N) instead of O(K*N).  The ECG reproduction uses the full map.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseConfig:
+    """Magnitudes of the analog imperfections (all in natural units)."""
+
+    gain_std: float = 0.02          # relative synapse gain spread
+    offset_std: float = 1.0         # ADC LSB, per (chunk, column)
+    readout_std: float = 0.7        # ADC LSB, per analog pass (temporal)
+    mode: str = "rank1"             # "none" | "rank1" | "full"
+
+    def with_mode(self, mode: str) -> "NoiseConfig":
+        return dataclasses.replace(self, mode=mode)
+
+
+NOISELESS = NoiseConfig(gain_std=0.0, offset_std=0.0, readout_std=0.0, mode="none")
+
+
+def init_fixed_pattern(
+    key: jax.Array,
+    k: int,
+    n: int,
+    n_chunks: int,
+    cfg: NoiseConfig,
+) -> dict:
+    """Sample the frozen fixed-pattern deviations for one logical (K, N) tile
+    grid.  Generated from the *logical* shape, so the pattern is independent
+    of how the tile grid is later sharded over the mesh (tested property).
+    """
+    if cfg.mode == "none" or (cfg.gain_std == 0.0 and cfg.offset_std == 0.0):
+        return {}
+    k_gain, k_row, k_col, k_off = jax.random.split(key, 4)
+    out = {}
+    if cfg.gain_std > 0.0:
+        if cfg.mode == "full":
+            out["gain"] = 1.0 + cfg.gain_std * jax.random.normal(
+                k_gain, (k, n), dtype=jnp.float32
+            )
+        elif cfg.mode == "rank1":
+            # split the variance between row (synapse-driver) and column
+            # (neuron transconductance) mismatch
+            s = cfg.gain_std / jnp.sqrt(2.0)
+            out["row_gain"] = 1.0 + s * jax.random.normal(k_row, (k,), jnp.float32)
+            out["col_gain"] = 1.0 + s * jax.random.normal(k_col, (n,), jnp.float32)
+        else:
+            raise ValueError(f"unknown noise mode {cfg.mode!r}")
+    if cfg.offset_std > 0.0:
+        out["chunk_offset"] = cfg.offset_std * jax.random.normal(
+            k_off, (n_chunks, n), jnp.float32
+        )
+    return out
+
+
+def effective_weight(w_code: jax.Array, fpn: dict) -> jax.Array:
+    """Apply fixed-pattern gain to quantized weight codes -> effective analog
+    weight (float).  ``w_code`` is [K, N] integer-valued float."""
+    if "gain" in fpn:
+        return w_code * fpn["gain"]
+    w = w_code
+    if "col_gain" in fpn:
+        w = w * fpn["col_gain"][None, :]
+    if "row_gain" in fpn:
+        w = w * fpn["row_gain"][:, None]
+    return w
+
+
+def chunk_offsets(fpn: dict, n_chunks: int, n: int) -> Optional[jax.Array]:
+    off = fpn.get("chunk_offset")
+    if off is None:
+        return None
+    assert off.shape == (n_chunks, n), (off.shape, n_chunks, n)
+    return off
+
+
+def readout_noise(
+    key: Optional[jax.Array],
+    shape: tuple,
+    cfg: NoiseConfig,
+) -> Optional[jax.Array]:
+    """Temporal readout noise for one batch of analog passes; ``None`` in
+    deterministic (standalone-inference) mode."""
+    if key is None or cfg.readout_std == 0.0 or cfg.mode == "none":
+        return None
+    return cfg.readout_std * jax.random.normal(key, shape, jnp.float32)

@@ -1,0 +1,1 @@
+"""Data substrates: synthetic ECG + FPGA preprocessing chain, LM pipeline."""

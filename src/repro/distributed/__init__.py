@@ -1,0 +1,2 @@
+"""Distribution substrates: logical-axis sharding, fault tolerance,
+pipeline parallelism."""

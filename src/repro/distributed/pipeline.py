@@ -1,0 +1,105 @@
+"""Pipeline parallelism over the ``pod`` mesh axis (GPipe schedule).
+
+The production mesh exposes ``pod`` as pure extra data-parallelism by
+default; this module provides the alternative: split the layer stack into
+one stage per pod and stream microbatches through a shard_map whose only
+inter-pod communication is a ``ppermute`` of the stage boundary activation
+per schedule tick - the canonical bubble-limited GPipe pipeline
+(bubble fraction = (S-1)/(M+S-1) for S stages, M microbatches).
+
+Scope: forward pipeline (inference / HIL-forward).  For training, the same
+schedule transposes mechanically (JAX differentiates through ppermute), at
+the cost of storing boundary activations per tick - fine for the 2-stage
+pod axis this mesh exposes.  Tested for exact equivalence with sequential
+execution in tests/test_pipeline.py.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+
+def pipeline_apply(
+    stage_fn: Callable,          # (stage_params, x [mb, ...]) -> y [mb, ...]
+    stage_params,                # pytree, leading axis = n_stages
+    x,                           # [n_micro, mb, ...] microbatched input
+    *,
+    axis: str = "pod",
+):
+    """Run ``x`` through ``n_stages`` sequential stages, one per shard of
+    ``axis``, with the GPipe schedule.  Returns [n_micro, mb, ...] outputs
+    (as produced by the last stage).
+    """
+    mesh = shd.get_mesh()
+    assert mesh is not None and axis in mesh.axis_names, (axis, mesh)
+    n_stages = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    n_micro = x.shape[0]
+    steps = n_micro + n_stages - 1
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def worker(params_loc, x_loc):
+        # params_loc: [1, ...] this pod's stage; x_loc: full microbatches
+        # (replicated over the pipeline axis; only stage 0 consumes them)
+        stage = jax.lax.axis_index(axis)
+        p = jax.tree.map(lambda a: a[0], params_loc)
+        mb_shape = x_loc.shape[1:]
+
+        def tick(carry, t):
+            boundary, outputs = carry
+            # stage 0 injects microbatch t; others take the permuted input
+            inject = jax.lax.dynamic_index_in_dim(
+                x_loc, jnp.clip(t, 0, n_micro - 1), keepdims=False
+            )
+            h = jnp.where(stage == 0, inject, boundary)
+            active = (t - stage >= 0) & (t - stage < n_micro)
+            y = stage_fn(p, h)
+            y = jnp.where(active, y, 0)
+            # last stage records its finished microbatch (index t - S + 1)
+            out_idx = jnp.clip(t - n_stages + 1, 0, n_micro - 1)
+            record = (stage == n_stages - 1) & (t - (n_stages - 1) >= 0)
+            outputs = jax.lax.cond(
+                record,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, out_idx, 0
+                ),
+                lambda o: o,
+                outputs,
+            )
+            boundary = jax.lax.ppermute(y, axis, perm)
+            return (boundary, outputs), None
+
+        b0 = jnp.zeros(mb_shape, x_loc.dtype)
+        o0 = jnp.zeros((n_micro,) + mb_shape, x_loc.dtype)
+        (_, outputs), _ = jax.lax.scan(
+            tick, (b0, o0), jnp.arange(steps)
+        )
+        # deliver the last stage's outputs to every pod: only the last
+        # stage recorded non-zeros, so a psum is an exact broadcast
+        outputs = jax.lax.psum(outputs, axis)
+        return outputs
+
+    other_axes = [a for a in mesh.axis_names if a != axis]
+    pspec = jax.tree.map(lambda _: P(axis), stage_params)
+    fn = jax.shard_map(
+        worker, mesh=mesh,
+        in_specs=(pspec, P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(stage_params, x)
+
+
+def split_stages(params_layers, n_stages: int):
+    """Reshape stacked layer params [n_groups, ...] into
+    [n_stages, n_groups/n_stages, ...] for pipeline_apply."""
+    def r(a):
+        g = a.shape[0]
+        assert g % n_stages == 0, (g, n_stages)
+        return a.reshape(n_stages, g // n_stages, *a.shape[1:])
+
+    return jax.tree.map(r, params_layers)

@@ -1,0 +1,227 @@
+"""Logical-axis sharding: named axes on every parameter/activation, resolved
+against the active mesh by a rules table (MaxText-style, dependency-free).
+
+Parallelism mapping (production mesh, see launch/mesh.py):
+- ``data`` (16)  - batch DP; MoE token groups
+- ``model`` (16) - TP: attention heads, FFN hidden, vocab, experts (EP),
+                   analog tile grid columns
+- ``pod``  (2)   - extra DP by default; pipeline stages when PP is enabled
+
+The analog tile grid inherits the sharding of the weight it tiles: a
+[K, N] analog layer sharded ("embed", "mlp") puts whole 128 x 512 BSS-2
+tiles on each device because 512 | N/16 for every assigned config - i.e.
+tile-parallelism across emulated ASICs == TP across TPU chips.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes, in priority order.  The first mesh
+# axis that (a) exists in the active mesh and (b) is not yet taken by
+# another logical axis of the same spec wins; otherwise the axis is
+# replicated.
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),                 # sequence kept local by default (SP opt-in)
+    "seq_sp": ("model",),      # sequence-parallel alternative
+    # FSDP: parameter embed dims shard over the data axis (ZeRO-3 style -
+    # GSPMD all-gathers params per scan group, reduce-scatters grads).
+    # Activations never carry the "embed" name (they use None), so batch
+    # keeps the data axis for DP.
+    "embed": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "qkv": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "capacity": (),
+    "layers": (),              # stacked-scan leading axis
+    "chunks": (),              # analog fpn chunk axis
+    "conv": (),
+    "state": (),
+    # decode caches: if kv_heads cannot shard (kv < model axis), the
+    # sequence axis takes the model axis instead - flash-decoding-style
+    # split-KV parallelism (resolution is shape-aware, right-to-left)
+    "kv_seq": ("model",),
+    "stage": ("pod",),         # pipeline stages
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: dict[str, tuple[str, ...]] = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+def set_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None) -> None:
+    _CTX.mesh = mesh
+    if rules is not None:
+        _CTX.rules = dict(rules)
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+class use_mesh:
+    """Context manager: activate a mesh (and optional rule overrides)."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[dict] = None):
+        self.mesh, self.rules = mesh, rules
+        self._saved: tuple = ()
+
+    def __enter__(self):
+        self._saved = (_CTX.mesh, _CTX.rules)
+        set_mesh(self.mesh, self.rules)
+        self._mesh_ctx = self.mesh
+        self._mesh_ctx.__enter__()
+        return self.mesh
+
+    def __exit__(self, *exc):
+        self._mesh_ctx.__exit__(*exc)
+        _CTX.mesh, _CTX.rules = self._saved
+        return False
+
+
+def logical_to_spec(names: Sequence[Optional[str]]) -> P:
+    """Resolve logical axis names to a PartitionSpec under the active rules."""
+    mesh = _CTX.mesh
+    axes_in_mesh = set(mesh.axis_names) if mesh is not None else set()
+    used: set[str] = set()
+    out = []
+    for name in names:
+        resolved = None
+        if name is not None:
+            for cand in _CTX.rules.get(name, ()):
+                if cand in axes_in_mesh and cand not in used:
+                    resolved = cand
+                    used.add(cand)
+                    break
+        out.append(resolved)
+    # multi-axis entries (e.g. batch -> ("pod", "data")): collapse tuple
+    return P(*out)
+
+
+def logical_to_spec_multi(names: Sequence[Optional[str]]) -> P:
+    """Like logical_to_spec but a logical axis may absorb *all* its candidate
+    mesh axes (used for 'batch' -> ('pod', 'data') joint DP)."""
+    mesh = _CTX.mesh
+    axes_in_mesh = set(mesh.axis_names) if mesh is not None else set()
+    used: set[str] = set()
+    out = []
+    for name in names:
+        resolved: tuple = ()
+        if name is not None:
+            for cand in _CTX.rules.get(name, ()):
+                if cand in axes_in_mesh and cand not in used:
+                    resolved = resolved + (cand,)
+                    used.add(cand)
+        out.append(resolved if resolved else None)
+    return P(*out)
+
+
+def resolve_spec(names: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+    """Shape-aware resolution: dims are assigned mesh axes right-to-left
+    (most-specific logical axes sit rightmost in our layouts) and an axis is
+    only taken when the dim size is divisible by it - otherwise the next
+    candidate (or replication) applies.  This is what makes explicit
+    in_shardings legal for every assigned architecture (e.g. kv_heads=2
+    cannot take the 16-way model axis, so the cache's kv_seq dim does)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return P()
+    names = tuple(names)
+    if len(names) > len(shape):       # collapsed dims (e.g. [B*S, d]): keep
+        names = names[-len(shape):]   # the trailing names, drop leading
+    elif len(names) < len(shape):
+        names = (None,) * (len(shape) - len(names)) + names
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set[str] = set()
+    out: list = [None] * len(names)
+    order = range(len(names) - 1, -1, -1)
+    for i in order:
+        name = names[i]
+        if name is None:
+            continue
+        dim = shape[i]
+        resolved: tuple = ()
+        prod = 1
+        for cand in _CTX.rules.get(name, ()):
+            if cand in sizes and cand not in used and dim % (
+                prod * sizes[cand]
+            ) == 0:
+                resolved = resolved + (cand,)
+                prod *= sizes[cand]
+                used.add(cand)
+        if resolved:
+            out[i] = resolved if len(resolved) > 1 else resolved[0]
+    return P(*out)
+
+
+def sharding_for(names: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None
+                 ) -> Optional[NamedSharding]:
+    mesh = _CTX.mesh
+    if mesh is None:
+        return None
+    if shape is None:
+        return NamedSharding(mesh, logical_to_spec_multi(names))
+    return NamedSharding(mesh, resolve_spec(names, shape))
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names (shape-aware); no-op
+    without a mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    sh = NamedSharding(mesh, resolve_spec(names, x.shape))
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+_SPEC_LEAF = lambda x: isinstance(x, tuple) and all(
+    isinstance(e, (str, type(None))) for e in x
+)
+
+
+def tree_sharding(spec_tree) -> object:
+    """Map a pytree of logical-name tuples to NamedShardings (or None).
+    Shape-unaware variant (kept for replicated/scalar specs)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return None
+    return jax.tree.map(
+        lambda names: sharding_for(names), spec_tree, is_leaf=_SPEC_LEAF
+    )
+
+
+def sharding_like(spec_tree, abstract_tree) -> object:
+    """Shape-aware tree sharding: resolve each leaf's logical names against
+    the matching abstract leaf's shape (divisibility-checked)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return None
+
+    def one(names, leaf):
+        return NamedSharding(mesh, resolve_spec(names, leaf.shape))
+
+    return jax.tree.map(one, spec_tree, abstract_tree, is_leaf=_SPEC_LEAF)
+
+
+def rules_for(run) -> dict:
+    """DEFAULT_RULES specialized by the RunConfig distribution knobs."""
+    rules = dict(DEFAULT_RULES)
+    if not getattr(run, "fsdp", True):
+        rules["embed"] = ()
+    if not getattr(run, "seq_sp", True):
+        rules["seq_sp"] = ()
+    return rules

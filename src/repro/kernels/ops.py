@@ -1,0 +1,90 @@
+"""Jitted public wrappers around the Pallas kernels with automatic
+platform dispatch and a custom-VJP HIL gradient.
+
+- On TPU the Mosaic kernels run natively (bf16 MXU path).
+- On CPU (this container) ``interpret=True`` executes the kernel bodies in
+  Python for bit-level validation against :mod:`repro.kernels.ref`.
+- ``analog_mvm`` carries the hardware-in-the-loop gradient (paper §III-B):
+  forward through the saturating kernel, backward through the straight-
+  through linearization of the ref oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hw import BSS2
+from repro.kernels import ref as ref_lib
+from repro.kernels.analog_mvm import analog_mvm_pallas
+from repro.kernels.preproc import maxmin_pool_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(4, 5, 6)
+)
+def analog_mvm(
+    a_code: jax.Array,
+    w_eff: jax.Array,
+    gain: jax.Array,
+    chunk_offset: Optional[jax.Array],
+    chunk_rows: int = BSS2.signed_rows,
+    faithful: bool = True,
+    use_pallas: Optional[bool] = None,
+) -> jax.Array:
+    """[M, K] x [K, N] chunked saturating analog VMM (forward = hardware)."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return analog_mvm_pallas(
+            a_code, w_eff, gain, chunk_offset,
+            chunk_rows=chunk_rows, faithful=faithful,
+            interpret=not _on_tpu(),
+            compute_dtype=jnp.bfloat16 if _on_tpu() else jnp.float32,
+        )
+    return ref_lib.analog_mvm_ref(
+        a_code, w_eff, gain, chunk_offset,
+        chunk_rows=chunk_rows, faithful=faithful,
+    )
+
+
+def _analog_mvm_fwd(a_code, w_eff, gain, chunk_offset,
+                    chunk_rows, faithful, use_pallas):
+    y = analog_mvm(a_code, w_eff, gain, chunk_offset,
+                   chunk_rows, faithful, use_pallas)
+    return y, (a_code, w_eff, gain, chunk_offset)
+
+
+def _analog_mvm_bwd(chunk_rows, faithful, use_pallas, res, g):
+    # HIL gradient: treat the hardware op as y ~= gain * (a @ w) and
+    # backpropagate through that linearization (STE across round/clip).
+    a_code, w_eff, gain, chunk_offset = res
+    g_scaled = g * gain                      # [M, N] * [N]
+    da = g_scaled @ w_eff.T
+    dw = a_code.T @ g_scaled
+    dgain = (g * (a_code @ w_eff)).sum(axis=0)
+    dgain = dgain if gain.ndim else dgain.sum()
+    # fixed-pattern offsets are frozen hardware buffers, not trained
+    d_off = None if chunk_offset is None else jnp.zeros_like(chunk_offset)
+    return da, dw, dgain, d_off
+
+
+analog_mvm.defvjp(_analog_mvm_fwd, _analog_mvm_bwd)
+
+
+def maxmin_pool(x: jax.Array, window: int = 32,
+                use_pallas: Optional[bool] = None) -> jax.Array:
+    """[..., T] -> [..., T/window] max-min pooling (preprocessing chain)."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    if use:
+        y = maxmin_pool_pallas(x2, window=window, interpret=not _on_tpu())
+    else:
+        y = ref_lib.maxmin_pool_ref(x2, window=window)
+    return y.reshape(shape[:-1] + (shape[-1] // window,))

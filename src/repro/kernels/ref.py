@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels.  Forward-only reference
+semantics; bit-identical to the hot paths in :mod:`repro.core.analog` and
+:mod:`repro.data.preprocess` (tested)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hw import BSS2
+
+
+def analog_mvm_ref(
+    a_code: jax.Array,          # [M, K] integer-valued float, 0..31
+    w_eff: jax.Array,           # [K, N] effective analog weights
+    gain: jax.Array,            # [N] or scalar
+    chunk_offset: Optional[jax.Array],  # [C, N] or None
+    *,
+    chunk_rows: int = BSS2.signed_rows,
+    faithful: bool = True,
+) -> jax.Array:
+    """Chunked saturating analog VMM oracle.  K must divide into chunks."""
+    m, k = a_code.shape
+    n = w_eff.shape[1]
+    assert k % chunk_rows == 0, (k, chunk_rows)
+    c = k // chunk_rows
+    a_c = a_code.reshape(m, c, chunk_rows).astype(jnp.float32)
+    w_c = w_eff.reshape(c, chunk_rows, n).astype(jnp.float32)
+    v = jnp.einsum("mck,ckn->mcn", a_c, w_c, preferred_element_type=jnp.float32)
+    v = v * gain
+    if chunk_offset is not None:
+        v = v + chunk_offset[None, :, :]
+    if faithful:
+        adc = jnp.clip(jnp.round(v), BSS2.adc_min, BSS2.adc_max)
+        return adc.sum(axis=1)
+    total = v.sum(axis=1)
+    return jnp.clip(jnp.round(total), BSS2.adc_min * c, BSS2.adc_max * c)
+
+
+def maxmin_pool_ref(x: jax.Array, window: int = 32) -> jax.Array:
+    """FPGA preprocessing pooling (paper Fig. 7): per non-overlapping window,
+    max - min.  x: [..., T] with T % window == 0 -> [..., T // window]."""
+    t = x.shape[-1]
+    assert t % window == 0, (t, window)
+    xw = x.reshape(x.shape[:-1] + (t // window, window))
+    return xw.max(axis=-1) - xw.min(axis=-1)

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches JAX device state - the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any JAX
+initialization and only then calls these.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 dual-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host has (CPU smoke / tests): pure data-parallel."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

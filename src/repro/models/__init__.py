@@ -1,0 +1,2 @@
+"""Model zoo: generic decoder LM (all 10 assigned archs) + the paper's ECG
+CDNN, all running on the analog execution backend."""

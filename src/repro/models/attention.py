@@ -1,0 +1,191 @@
+"""Grouped-query attention with chunked online-softmax (flash-style) for
+long prefill and a dense-cache decode path.
+
+The parameter projections (QKV/O) run on the analog backend; the
+activation x activation products (logits, AV) stay digital - the BSS-2
+synapse array holds static weights only (DESIGN.md §5.1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import AnalogConfig
+from repro.core.noise import NoiseConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.flash import flash_attention, flash_attention_cp
+
+NEG_INF = -1e30
+
+
+def attention_init(key, d_model, n_heads, n_kv_heads, head_dim, *,
+                   noise: NoiseConfig = NoiseConfig(), dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.linear_init(ks[0], d_model, n_heads * head_dim,
+                            noise=noise, dtype=dtype),
+        "wk": L.linear_init(ks[1], d_model, n_kv_heads * head_dim,
+                            noise=noise, dtype=dtype),
+        "wv": L.linear_init(ks[2], d_model, n_kv_heads * head_dim,
+                            noise=noise, dtype=dtype),
+        "wo": L.linear_init(ks[3], n_heads * head_dim, d_model,
+                            noise=noise, dtype=dtype),
+    }
+
+
+def attention_specs(noise: NoiseConfig = NoiseConfig()):
+    return {
+        "wq": L.linear_specs("embed", "heads", noise=noise),
+        "wk": L.linear_specs("embed", "heads", noise=noise),
+        "wv": L.linear_specs("embed", "heads", noise=noise),
+        "wo": L.linear_specs("heads", "embed", noise=noise),
+    }
+
+
+# ----------------------------------------------------------- soft attention
+def _dense_attention(q, k, v, *, causal: bool, q_offset=0,
+                     window: Optional[int] = None):
+    """q: [B,Sq,KVH,G,dh], k/v: [B,Sk,KVH,dh].  Direct path for short S."""
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        mask = qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def _cp_wanted(attn_cp: str, n_heads: int) -> bool:
+    """Context-parallel attention: 'auto' turns it on exactly when the head
+    count cannot take the model mesh axis (24/28/40 heads vs 16) - there
+    head-TP is impossible and GSPMD would replicate attention compute."""
+    from repro.distributed import sharding as shd
+
+    mesh = shd.get_mesh()
+    if attn_cp == "off" or mesh is None or "model" not in mesh.axis_names:
+        return False
+    n_model = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    if attn_cp == "cp":
+        return True
+    return n_heads % n_model != 0
+
+
+def attention_apply(params, x, *, positions, acfg: AnalogConfig, n_heads,
+                    n_kv_heads, head_dim, rope_theta, mrope=False,
+                    cache=None, window=None, flash_threshold=2048,
+                    attn_cp="auto", key=None):
+    """Returns (out, new_cache).  ``cache``: dict(k, v, len) for decode."""
+    b, s, _ = x.shape
+    g = n_heads // n_kv_heads
+    ks = jax.random.split(key, 4) if key is not None else (None,) * 4
+    q = L.linear_apply(params["wq"], x, acfg, key=ks[0])
+    k = L.linear_apply(params["wk"], x, acfg, key=ks[1])
+    v = L.linear_apply(params["wv"], x, acfg, key=ks[2])
+    q = q.reshape(b, s, n_heads, head_dim)
+    k = k.reshape(b, s, n_kv_heads, head_dim)
+    v = v.reshape(b, s, n_kv_heads, head_dim)
+    rope = L.apply_mrope if mrope else L.apply_rope
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    qg = q.reshape(b, s, n_kv_heads, g, head_dim)
+
+    if cache is not None:
+        # decode: append to the cache, attend over the valid prefix
+        length = cache["len"]                      # scalar int32
+        quantized = cache["k"].dtype == jnp.int8
+        new_cache = {"len": length + s}
+        if quantized:
+            # int8 KV cache ("store at ADC resolution", beyond-paper):
+            # per-(position, head) symmetric scales; halves the decode
+            # memory-roofline term vs bf16 at <1% logit error
+            ks_new = jnp.abs(k).max(axis=-1).astype(jnp.float32) / 127.0
+            vs_new = jnp.abs(v).max(axis=-1).astype(jnp.float32) / 127.0
+            ks_new = jnp.maximum(ks_new, 1e-9)
+            vs_new = jnp.maximum(vs_new, 1e-9)
+            kq = jnp.clip(jnp.round(k / ks_new[..., None]), -127, 127)
+            vq = jnp.clip(jnp.round(v / vs_new[..., None]), -127, 127)
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], kq.astype(jnp.int8), (0, length, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], vq.astype(jnp.int8), (0, length, 0, 0))
+            cks = jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks_new, (0, length, 0))
+            cvs = jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs_new, (0, length, 0))
+            ck_f = ck.astype(jnp.float32) * cks[..., None]
+            cv_f = cv.astype(jnp.float32) * cvs[..., None]
+            new_cache.update(k_scale=cks, v_scale=cvs)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, length, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, length, 0, 0)
+            )
+            ck_f, cv_f = ck.astype(jnp.float32), cv.astype(jnp.float32)
+        smax = ck.shape[1]
+        kpos = jnp.arange(smax)
+        qpos = length + jnp.arange(s)
+        mask = qpos[:, None] >= kpos[None, :]
+        mask &= (kpos < length + s)[None, :]
+        if window is not None:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        sc = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), ck_f
+        ) / jnp.sqrt(head_dim)
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, cv_f)
+        o = o.astype(x.dtype)
+        new_cache.update(k=ck, v=cv)
+    else:
+        if _cp_wanted(attn_cp, n_heads):
+            o = flash_attention_cp(qg, k, v, causal=True, window=window)
+        elif s <= flash_threshold:
+            o = _dense_attention(qg, k, v, causal=True, window=window)
+        else:
+            o = flash_attention(qg, k, v, causal=True, window=window)
+        new_cache = None
+
+    o = o.reshape(b, s, n_heads * head_dim)
+    out = L.linear_apply(params["wo"], o, acfg, key=ks[3])
+    return out, new_cache
+
+
+def init_cache(batch, max_len, n_kv_heads, head_dim, dtype=jnp.bfloat16):
+    c = {
+        "k": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if dtype == jnp.int8:
+        c["k_scale"] = jnp.zeros((batch, max_len, n_kv_heads), jnp.float32)
+        c["v_scale"] = jnp.zeros((batch, max_len, n_kv_heads), jnp.float32)
+    return c
+
+
+def cache_specs(dtype=jnp.bfloat16):
+    c = {
+        "k": ("batch", "kv_seq", "kv_heads", None),
+        "v": ("batch", "kv_seq", "kv_heads", None),
+        "len": (),
+    }
+    if dtype == jnp.int8:
+        c["k_scale"] = ("batch", "kv_seq", "kv_heads")
+        c["v_scale"] = ("batch", "kv_seq", "kv_heads")
+    return c

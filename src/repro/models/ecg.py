@@ -1,0 +1,119 @@
+"""The paper's ECG A-fib classifier (Fig. 6) on the analog backend.
+
+On-chip arrangement reproduced (DESIGN.md §2 for the shape reconstruction):
+- conv layer: 64 taps x 2 channels = 128 signed rows, replicated 32 times
+  across columns -> 32 positions x 8 output channels = 256 columns of the
+  upper synapse array half; implemented as im2col + one analog matmul,
+  which is *exactly* the hardware layout (weight replicas = tile columns).
+- fc1: 256 -> 123, split into two 128-row chunks evaluated side by side;
+  our per-chunk saturating accumulation reproduces this natively.
+- fc2: 123 -> 10, followed by average pooling of 5 neurons per class
+  (noise reduction; trained with max pooling instead, §III-B).
+- ReLUs happen at the ADC (offset-aligned readout) followed by the 5-bit
+  right-shift requantization - both emulated bit-exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import AnalogConfig, analog_linear_init
+from repro.core.energy import LayerWork
+from repro.core.hw import BSS2
+from repro.core.noise import NoiseConfig
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class ECGConfig:
+    in_channels: int = 2
+    in_len: int = 126          # preprocessed samples (4033 raw / 32-pool)
+    conv_taps: int = 64
+    conv_stride: int = 2
+    conv_channels: int = 8
+    hidden: int = 123
+    classes: int = 2
+    class_copies: int = 5      # 10 output neurons -> 2 classes
+    noise: NoiseConfig = dataclasses.field(default_factory=NoiseConfig)
+
+    @property
+    def conv_positions(self) -> int:
+        return (self.in_len - self.conv_taps) // self.conv_stride + 1
+
+    @property
+    def conv_cols(self) -> int:
+        return self.conv_positions * self.conv_channels
+
+    def layer_works(self) -> list[LayerWork]:
+        return [
+            LayerWork(k=self.conv_taps * self.in_channels, n=self.conv_cols),
+            LayerWork(k=self.conv_cols, n=self.hidden),
+            LayerWork(k=self.hidden, n=self.classes * self.class_copies),
+        ]
+
+    def total_ops(self) -> int:
+        return sum(2 * lw.macs for lw in self.layer_works())
+
+
+def ecg_init(key, cfg: ECGConfig = ECGConfig()):
+    ks = jax.random.split(key, 3)
+    nz = cfg.noise.with_mode("full")  # per-synapse fpn, faithful (small net)
+    return {
+        "conv": analog_linear_init(
+            ks[0], cfg.conv_taps * cfg.in_channels, cfg.conv_channels,
+            noise=nz,
+        ),
+        "fc1": analog_linear_init(ks[1], cfg.conv_cols, cfg.hidden, noise=nz),
+        "fc2": analog_linear_init(
+            ks[2], cfg.hidden, cfg.classes * cfg.class_copies, noise=nz
+        ),
+    }
+
+
+def _im2col(x, taps, stride):
+    """x: [B, C, T] -> [B, positions, taps * C] (the event-address lookup
+    table of the FPGA vector generator, §II-C)."""
+    b, c, t = x.shape
+    npos = (t - taps) // stride + 1
+    idx = jnp.arange(npos)[:, None] * stride + jnp.arange(taps)[None, :]
+    cols = x[:, :, idx]                      # [B, C, npos, taps]
+    return cols.transpose(0, 2, 3, 1).reshape(b, npos, taps * c)
+
+
+def ecg_apply(params, x, acfg: AnalogConfig, cfg: ECGConfig = ECGConfig(), *,
+              train: bool = False, key=None):
+    """x: [B, C, T] preprocessed 5-bit activations (integer-valued float).
+
+    Returns logits [B, classes].  ReLUs run as ADC-fused rectification +
+    5-bit requantization between analog layers (II-A); in digital mode they
+    are plain ReLUs.
+    """
+    ks = jax.random.split(key, 3) if key is not None else (None,) * 3
+    b = x.shape[0]
+    # input activations are unsigned 5-bit codes from the preprocessing
+    # chain; scale 1.0 (codes are the values)
+    cols = _im2col(x, cfg.conv_taps, cfg.conv_stride)
+    acfg_in = acfg.replace(signed_input="none")
+
+    h = L.linear_apply(params["conv"], cols, acfg_in, key=ks[0])
+    h = jax.nn.relu(h.reshape(b, cfg.conv_cols))
+
+    h = L.linear_apply(params["fc1"], h, acfg_in, key=ks[1])
+    h = jax.nn.relu(h)
+
+    out = L.linear_apply(params["fc2"], h, acfg_in, key=ks[2])
+    out = out.reshape(b, cfg.classes, cfg.class_copies)
+    if train:
+        # §III-B: max pooling during training for robustness
+        return out.max(axis=-1)
+    return out.mean(axis=-1)  # average pooling at inference (noise averaging)
+
+
+def ecg_loss(params, x, labels, acfg, cfg: ECGConfig = ECGConfig(), key=None):
+    logits = ecg_apply(params, x, acfg, cfg, train=True, key=key)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return nll, {"acc": acc}

@@ -1,0 +1,290 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-bounded sort-based
+dispatch, batched expert GEMMs with experts sharded over the ``model`` mesh
+axis (expert parallelism).
+
+Analog mapping (DESIGN.md §5): each expert's FFN matrices are analog tile
+grids; EP places whole experts (= disjoint tile sets) on distinct devices,
+exactly the paper's "individual layers partitioned into chip-sized chunks
+executed in parallel" (§II-D) generalized to the expert dimension.
+
+Dispatch algorithm (dropping, capacity factor c):
+  1. router logits -> top-k experts + normalized weights per token
+  2. position-in-expert via a stable sort over expert ids
+  3. scatter tokens into a [E, C, d] buffer (over-capacity tokens drop)
+  4. einsum expert GEMMs, gather back with combine weights
+
+A dense einsum fallback (``dense=True``) exists for tiny smoke configs where
+sort/scatter overhead dwarfs the compute.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import AnalogConfig
+from repro.core.noise import NoiseConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+
+def moe_init(key, d_model, d_ff, n_experts, *, n_shared=0, act="swiglu",
+             noise: NoiseConfig = NoiseConfig(), dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    shape_up = (n_experts, d_model, d_ff)
+    shape_down = (n_experts, d_ff, d_model)
+    s_up = 1.0 / jnp.sqrt(d_model)
+    s_down = 1.0 / jnp.sqrt(d_ff)
+    p = {
+        "router": {"w": (jax.random.normal(ks[0], (d_model, n_experts))
+                         * s_up).astype(jnp.float32)},
+        "up": (jax.random.normal(ks[1], shape_up) * s_up).astype(dtype),
+        "down": (jax.random.normal(ks[2], shape_down) * s_down).astype(dtype),
+    }
+    if act == "swiglu":
+        p["gate"] = (jax.random.normal(ks[3], shape_up) * s_up).astype(dtype)
+    if n_shared:
+        p["shared"] = L.mlp_init(
+            jax.random.fold_in(key, 7), d_model, d_ff * n_shared, act=act,
+            noise=noise, dtype=dtype,
+        )
+    return p
+
+
+def moe_specs(*, act="swiglu", n_shared=0,
+              noise: NoiseConfig = NoiseConfig()):
+    p = {
+        "router": {"w": (None, None)},
+        "up": ("expert", "embed", None),
+        "down": ("expert", None, "embed"),
+    }
+    if act == "swiglu":
+        p["gate"] = ("expert", "embed", None)
+    if n_shared:
+        p["shared"] = L.mlp_specs(act=act, noise=noise)
+    return p
+
+
+def _analog_expert_matmul(xe, w, acfg: AnalogConfig):
+    """Per-expert analog matmul: xe [E, C, K] x w [E, K, N] with the BSS-2
+    chunked saturating semantics (per-expert column scales + gain, signed
+    inputs via split encoding).  Expert fixed-pattern noise is omitted (the
+    rank-1 map would add O(E*(K+N)) state; documented in DESIGN.md)."""
+    from repro.core import quant
+    from repro.core.analog import _statistical_gain, analog_matmul
+
+    xf = xe.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    a_scale = quant.act_scale_from_max(
+        jax.lax.stop_gradient(jnp.abs(xf)).max() + 1e-9
+    )
+    w_scale = quant.weight_scale_from_max(
+        jax.lax.stop_gradient(jnp.abs(wf)).max(axis=1, keepdims=True) + 1e-9
+    )                                                        # [E, 1, N]
+    w_code = quant.quantize_weight(wf, w_scale)
+    gain = jax.vmap(lambda we: _statistical_gain(we, acfg.chunk_rows))(wf)
+    inner = acfg.replace(use_pallas=False, signed_input="none")
+
+    def one(a_e, w_e, g_e):
+        return analog_matmul(a_e, w_e, g_e, None, None, inner)
+
+    a_pos = quant.quantize_act(xf, a_scale)
+    a_neg = quant.quantize_act(-xf, a_scale)
+    y_int = jax.vmap(one)(a_pos, w_code, gain) - jax.vmap(one)(
+        a_neg, w_code, gain
+    )
+    y = y_int * (a_scale * w_scale / gain[:, None, None])
+    return y.astype(xe.dtype)
+
+
+def _expert_matmul(xe, w, acfg: AnalogConfig):
+    """xe: [..., E, C, K] x w [E, K, N] -> [..., E, C, N]."""
+    if acfg.mode == "digital":
+        return jnp.einsum("...eck,ekn->...ecn", xe, w.astype(xe.dtype))
+    if xe.ndim == 3:
+        return _analog_expert_matmul(xe, w, acfg)
+    # fold leading group dims into capacity for the per-expert analog op
+    lead = xe.shape[:-3]
+    g = 1
+    for v in lead:
+        g *= v
+    e, c, k = xe.shape[-3:]
+    x3 = xe.reshape(g, e, c, k).transpose(1, 0, 2, 3).reshape(e, g * c, k)
+    y3 = _analog_expert_matmul(x3, w, acfg)
+    n = y3.shape[-1]
+    return (
+        y3.reshape(e, g, c, n).transpose(1, 0, 2, 3).reshape(*lead, e, c, n)
+    )
+
+
+def _expert_ffn(params, xe, act, acfg: AnalogConfig):
+    """xe: [E, C, d] -> [E, C, d] through the (analog) expert FFNs."""
+    up = _expert_matmul(xe, params["up"], acfg)
+    if act == "swiglu":
+        gate = _expert_matmul(xe, params["gate"], acfg)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return _expert_matmul(h, params["down"], acfg)
+
+
+def _expert_block_shard_map(params, buf_inputs, e, capacity, d, act, acfg):
+    """Expert-parallel FFN with *explicit* collectives via shard_map.
+
+    Each model shard builds the dispatch buffer for its LOCAL experts only
+    (pure local scatter), runs the expert FFN on its expert shard, and the
+    single collective is one all-gather of the expert outputs
+    [B_loc, E, C, d] over the model axis (bwd = reduce-scatter).  This
+    replaces GSPMD's choice of replicating the [B_loc, S*k, d] routed-copies
+    tensor (measured 5 x 4 GiB f32 collectives per group on qwen3/train_4k;
+    see EXPERIMENTS.md §Perf iteration 3)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import sharding as shd
+
+    mesh = shd.get_mesh()
+    x, st_, se, pos_c, keep = buf_inputs
+    axes = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes) or None
+    n_model = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    e_loc = e // n_model
+
+    def block(xb, st__, se_, pos_, keep_, up, gate, down):
+        # xb: [B_loc, S, d] tokens (replicated over model); indices local
+        xb = xb.astype(jnp.bfloat16)   # pin the gathered dtype to bf16
+        midx = jax.lax.axis_index("model")
+        se_loc = se_ - midx * e_loc
+        valid = keep_ & (se_loc >= 0) & (se_loc < e_loc)
+        se_c = jnp.clip(se_loc, 0, e_loc - 1)
+
+        def scatter_one(xg, tg, sg, pg, vg):
+            buf = jnp.zeros((e_loc, capacity, d), xg.dtype)
+            return buf.at[sg, pg].add(jnp.where(vg[:, None], xg[tg], 0))
+
+        buf = jax.vmap(scatter_one)(xb, st__, se_c, pos_, valid)
+        p_loc = {"up": up, "down": down}
+        if gate is not None:
+            p_loc["gate"] = gate
+        ye_loc = _expert_ffn(p_loc, buf, act, acfg)   # [B_loc, E_loc, C, d]
+        # one explicit collective: gather every shard's expert outputs
+        ye = jax.lax.all_gather(ye_loc, "model", axis=1, tiled=True)
+        return ye                                      # [B_loc, E, C, d]
+
+    gate = params.get("gate")
+    in_specs = (
+        P(batch_axes), P(batch_axes), P(batch_axes), P(batch_axes),
+        P(batch_axes),
+        P("model"), (P("model") if gate is not None else P()), P("model"),
+    )
+    fn = jax.shard_map(
+        block, mesh=mesh,
+        in_specs=in_specs,
+        out_specs=P(batch_axes),
+        check_vma=False,
+    )
+    return fn(x, st_, se, pos_c, keep, params["up"],
+              gate if gate is not None else jnp.zeros((), x.dtype),
+              params["down"])
+
+
+def moe_apply(params, x, *, acfg: AnalogConfig, top_k: int,
+              capacity_factor: float = 1.25, act="swiglu",
+              dense: bool = False, dispatch: str = "gspmd_ep",
+              key=None):
+    """x: [B, S, d] -> (y, aux).  The batch dim doubles as the dispatch
+    group (MaxText-style): all routing indices are group-local, so under
+    GSPMD the scatter/gather shard over ``data`` while experts shard over
+    ``model`` (EP) - no replicated [tokens, d] intermediates."""
+    b, s, d = x.shape
+    e = params["up"].shape[0]
+
+    logits = x.astype(jnp.float32) @ params["router"]["w"]        # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, top_k)                      # [B, S, k]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(
+        1.0 / topi.size
+    )
+    aux = e * jnp.sum(me * ce)
+
+    if dense:
+        # smoke-config fallback: every expert sees every token
+        t = b * s
+        xf = x.reshape(t, d)
+        w_full = jnp.zeros((t, e), jnp.float32).at[
+            jnp.arange(t)[:, None], topi.reshape(t, top_k)
+        ].set(topw.reshape(t, top_k))
+        ye = _expert_ffn(
+            params, jnp.broadcast_to(xf[None], (e, t, d)), act, acfg
+        )
+        y = jnp.einsum("te,etd->td", w_full, ye.astype(jnp.float32)).astype(
+            x.dtype
+        ).reshape(b, s, d)
+    else:
+        capacity = int(max(top_k, capacity_factor * s * top_k / e))
+        eg = topi.reshape(b, s * top_k)
+        wg = topw.reshape(b, s * top_k)
+
+        def route(egg):
+            """Group-local routing metadata: sorted expert ids, source
+            token ids, positions-in-expert, keep mask."""
+            order = jnp.argsort(egg, stable=True)
+            se = egg[order]
+            st_ = order // top_k
+            pos_global = jnp.arange(se.shape[0])
+            seg_start = jnp.full(
+                (e,), se.shape[0], pos_global.dtype
+            ).at[se].min(pos_global)
+            pos = pos_global - seg_start[se]
+            keep = pos < capacity
+            pos_c = jnp.where(keep, pos, capacity - 1).astype(jnp.int32)
+            return se, st_, pos_c, keep, order
+
+        se, st_, pos_c, keep, order = jax.vmap(route)(eg)
+        sw = jnp.take_along_axis(wg, order, axis=1)
+
+        from repro.distributed import sharding as shd
+
+        mesh = shd.get_mesh()
+        use_sm = (
+            dispatch == "shard_map"
+            and mesh is not None
+            and "model" in mesh.axis_names
+        )
+        if use_sm:
+            ye = _expert_block_shard_map(
+                params, (x, st_, se, pos_c, keep), e, capacity, d, act, acfg
+            )
+        else:
+            def scatter_one(xg, tg, sg, pg, kg):
+                buf = jnp.zeros((e, capacity, d), xg.dtype)
+                return buf.at[sg, pg].add(
+                    jnp.where(kg[:, None], xg[tg], 0)
+                )
+
+            buf = jax.vmap(scatter_one)(x, st_, se, pos_c, keep)
+            if dispatch == "replicated_buf":
+                # (refuted variant, kept for the §Perf log)
+                buf = constrain(buf, "batch", None, None, None)
+            else:
+                buf = constrain(buf, "batch", "expert", "capacity", None)
+            ye = _expert_ffn(params, buf, act, acfg)      # [B, E, C, d]
+            ye = constrain(ye, "batch", "expert", "capacity", None)
+
+        def combine_one(yeg, seg, stg, pcg, kg, swg):
+            contrib = yeg[seg, pcg] * jnp.where(kg, swg, 0.0)[:, None].astype(
+                x.dtype
+            )
+            return jnp.zeros((s, d), x.dtype).at[stg].add(
+                contrib.astype(x.dtype)
+            )
+
+        y = jax.vmap(combine_one)(ye, se, st_, pos_c, keep, sw)
+
+    if "shared" in params:
+        y = y + L.mlp_apply(params["shared"], x, acfg, act=act, key=key)
+    return y, aux

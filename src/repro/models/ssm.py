@@ -1,0 +1,145 @@
+"""Mamba-2 (SSD, arXiv:2405.21060) block for the Zamba2 hybrid architecture.
+
+Analog mapping (DESIGN.md §5.1): in/out projections are analog tile matmuls;
+the causal depthwise conv and the selective state-space recurrence are
+stateful dynamics and stay digital (BSS-2 neuron-mode analogue).
+
+Baseline recurrence: sequential scan over time (paper-faithful baseline for
+§Perf); the chunked SSD block-matmul form is a hillclimb option.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import AnalogConfig
+from repro.core.noise import NoiseConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+CONV_K = 4
+
+
+def mamba_init(key, d_model, *, d_state=64, expand=2, head_dim=64,
+               noise: NoiseConfig = NoiseConfig(), dtype=jnp.float32):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    d_conv_ch = d_inner + 2 * d_state       # x plus B and C streams
+    return {
+        # fused input projection: [z | xBC | dt]
+        "in_proj": L.linear_init(
+            ks[0], d_model, d_inner + d_conv_ch + n_heads,
+            noise=noise, dtype=dtype,
+        ),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, d_conv_ch)) * 0.2).astype(
+            jnp.float32
+        ),
+        "conv_b": jnp.zeros((d_conv_ch,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32)
+        ),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "norm": L.norm_init(d_inner, "rmsnorm"),
+        "out_proj": L.linear_init(
+            ks[2], d_inner, d_model, noise=noise, dtype=dtype
+        ),
+    }
+
+
+def mamba_specs(noise: NoiseConfig = NoiseConfig()):
+    return {
+        "in_proj": L.linear_specs("embed", "mlp", noise=noise),
+        "conv_w": (None, "mlp"),
+        "conv_b": ("mlp",),
+        "A_log": (None,),
+        "dt_bias": (None,),
+        "D": (None,),
+        "norm": L.norm_specs("rmsnorm"),
+        "out_proj": L.linear_specs("mlp", "embed", noise=noise),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv over time.  x: [B, T, C]; w: [K, C].
+    conv_state: [B, K-1, C] carry for decode."""
+    k = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)       # [B, T+K-1, C]
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i] for i in range(k)
+    ) + b
+    new_state = xp[:, -(k - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def ssd_scan(xh, dt, a_decay, B, C, state0):
+    """Selective state-space recurrence.
+
+    xh: [B, T, H, P] inputs per head; dt: [B, T, H]; a_decay: [B, T, H]
+    B, C: [B, T, N] (single group); state0: [B, H, P, N]
+    returns y: [B, T, H, P], state: [B, H, P, N]
+    """
+
+    def step(state, inp):
+        x_t, dt_t, a_t, b_t, c_t = inp
+        # state <- a * state + dt * x (x) B
+        upd = (dt_t[..., None] * x_t)[..., None] * b_t[:, None, None, :]
+        state = a_t[..., None, None] * state + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, c_t)
+        return state, y
+
+    seq = tuple(jnp.moveaxis(a, 1, 0) for a in (xh, dt, a_decay, B, C))
+    state, ys = jax.lax.scan(step, state0, seq)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def mamba_apply(params, x, *, acfg: AnalogConfig, d_state=64, expand=2,
+                head_dim=64, cache=None, key=None):
+    """x: [B, T, d].  cache: {"conv": [B, K-1, C], "state": [B,H,P,N]}."""
+    b, t, d = x.shape
+    d_inner = expand * d
+    n_heads = d_inner // head_dim
+    d_conv_ch = d_inner + 2 * d_state
+    kk = jax.random.split(key, 2) if key is not None else (None, None)
+
+    zxbcdt = L.linear_apply(params["in_proj"], x, acfg, key=kk[0])
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : d_inner + d_conv_ch]
+    dt_raw = zxbcdt[..., d_inner + d_conv_ch :]
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(
+        xbc.astype(jnp.float32), params["conv_w"], params["conv_b"],
+        conv_state,
+    )
+    xs = xbc[..., :d_inner]
+    B = xbc[..., d_inner : d_inner + d_state]
+    C = xbc[..., d_inner + d_state :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = jnp.exp(-dt * jnp.exp(params["A_log"]))         # [B, T, H] in (0,1)
+    xh = xs.reshape(b, t, n_heads, head_dim)
+    state0 = (
+        cache["state"]
+        if cache is not None
+        else jnp.zeros((b, n_heads, head_dim, d_state), jnp.float32)
+    )
+    y, state = ssd_scan(xh, dt, a, B, C, state0)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(b, t, d_inner)
+    y = L.norm_apply(params["norm"], y, "rmsnorm")
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = constrain(y, "batch", "seq", "mlp")
+    out = L.linear_apply(params["out_proj"], y, acfg, key=kk[1])
+    new_cache = {"conv": new_conv, "state": state}
+    return out, new_cache
+
+
+def mamba_cache_specs():
+    return {
+        "conv": ("batch", None, "mlp"),
+        "state": ("batch", "mlp", None, None),
+    }

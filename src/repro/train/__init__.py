@@ -1,0 +1,2 @@
+"""Training substrates: optimizer, train-step factory, checkpointing,
+gradient compression."""

@@ -1,0 +1,169 @@
+"""Fault-tolerant checkpointing without external dependencies.
+
+Guarantees (each covered by a test):
+- **atomicity**: write to ``<dir>/tmp.<step>`` then ``os.replace`` - a crash
+  mid-write never corrupts the latest checkpoint;
+- **integrity**: per-file SHA-256 recorded in the manifest and verified on
+  restore;
+- **resumability**: restore-latest returns (params, opt_state, step, extra)
+  and skips corrupt/partial checkpoints (falls back to the previous one);
+- **retention**: keep-last-k garbage collection;
+- **sharded-friendly**: arrays are saved per host-process file
+  (``shard-<proc>.npz``); on multi-host each process writes its addressable
+  shards (single-process here, but the layout is multi-host ready).
+
+Leaf addressing uses '/'-joined pytree key paths, so checkpoints are
+structure-stable across runs and partially loadable.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs {leaf.shape}"
+            )
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(paths[1], leaves)
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def save(directory: str, step: int, params, opt_state=None,
+         extra: Optional[dict] = None, keep: int = 3) -> str:
+    """Atomically save a checkpoint; returns the final path."""
+    os.makedirs(directory, exist_ok=True)
+    proc = jax.process_index()
+    tmp = os.path.join(directory, f"tmp.step_{step:09d}")
+    final = os.path.join(directory, f"step_{step:09d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    payload = {"params": params}
+    if opt_state is not None:
+        payload["opt_state"] = opt_state
+    flat = _flatten(payload)
+    shard_file = os.path.join(tmp, f"shard-{proc:05d}.npz")
+    np.savez(shard_file, **flat)
+
+    manifest = {
+        "step": int(step),
+        "time": time.time(),
+        "extra": extra or {},
+        "files": {
+            os.path.basename(shard_file): _sha256(shard_file),
+        },
+        "n_leaves": len(flat),
+    }
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if os.path.isdir(final):   # re-save of the same step: replace it
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic publish
+    _gc(directory, keep)
+    return final
+
+
+def _steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = _steps(directory)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:09d}"),
+                      ignore_errors=True)
+    # sweep stale tmp dirs from crashed writers
+    for name in os.listdir(directory):
+        if name.startswith("tmp."):
+            shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
+
+
+def _verify(path: str) -> Optional[dict]:
+    try:
+        with open(os.path.join(path, MANIFEST)) as f:
+            manifest = json.load(f)
+        for fname, digest in manifest["files"].items():
+            fpath = os.path.join(path, fname)
+            if not os.path.exists(fpath) or _sha256(fpath) != digest:
+                return None
+        return manifest
+    except (OSError, json.JSONDecodeError, KeyError):
+        return None
+
+
+def restore_latest(directory: str, params_template, opt_template=None):
+    """Restore the newest intact checkpoint.
+
+    Returns (params, opt_state, step, extra) or None if nothing restorable.
+    Corrupt checkpoints are skipped (fault tolerance under partial writes).
+    """
+    for step in reversed(_steps(directory)):
+        path = os.path.join(directory, f"step_{step:09d}")
+        manifest = _verify(path)
+        if manifest is None:
+            continue
+        flat = {}
+        for fname in manifest["files"]:
+            with np.load(os.path.join(path, fname)) as z:
+                flat.update({k: z[k] for k in z.files})
+        template = {"params": params_template}
+        if opt_template is not None:
+            template["opt_state"] = opt_template
+        try:
+            payload = _unflatten(template, flat)
+        except (KeyError, ValueError):
+            continue
+        return (
+            payload["params"],
+            payload.get("opt_state"),
+            manifest["step"],
+            manifest.get("extra", {}),
+        )
+    return None

@@ -1,0 +1,71 @@
+"""Int8 gradient compression with error feedback for bandwidth-bound
+all-reduce (distributed-optimization substrate).
+
+Scheme (1-bit-Adam-family, simplified to int8): per-leaf symmetric int8
+quantization with per-leaf scale; the quantization residual is carried in an
+error-feedback buffer so the compression bias vanishes over steps
+(Karimireddy et al. 2019).  The compressed representation is what crosses
+the ``data``/``pod`` axes: 4x less all-reduce traffic than fp32 (2x vs bf16)
+at <1e-2 relative error per step and no asymptotic convergence penalty.
+
+Integration: ``compress -> psum(int8 as f32 accum) -> decompress``.  Under
+GSPMD the all-reduce happens implicitly on the averaged gradient; we expose
+an explicit shard_map-based reduction in distributed/collectives for the
+overlap experiments, and this module supplies the codec + error feedback.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params):
+    """Zero error-feedback buffers shaped like the gradients."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(g: jax.Array):
+    """Symmetric int8 quantization; returns (codes int8, scale f32)."""
+    scale = jnp.maximum(jnp.abs(g).max(), 1e-30) / 127.0
+    codes = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def decompress(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, ef):
+    """Apply error feedback, compress each leaf.
+
+    Returns (compressed pytree of (codes, scale), new error buffers).
+    """
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        codes, scale = compress(corrected)
+        recon = decompress(codes, scale)
+        return (codes, scale), corrected - recon
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = treedef.unflatten([p[0] for p in pairs])
+    new_ef = treedef.unflatten([p[1] for p in pairs])
+    return comp, new_ef
+
+
+def decompress_grads(comp):
+    is_pair = lambda x: (
+        isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "dtype")
+    )
+    return jax.tree.map(
+        lambda pair: decompress(*pair), comp, is_leaf=is_pair
+    )
+
+
+def compression_ratio(grads) -> float:
+    """Bytes saved vs fp32 transport."""
+    fp32 = sum(x.size * 4 for x in jax.tree.leaves(grads))
+    int8 = sum(x.size * 1 + 4 for x in jax.tree.leaves(grads))
+    return fp32 / int8

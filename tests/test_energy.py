@@ -1,0 +1,104 @@
+"""The analytical system model must reproduce the paper's Table 1 and
+Eqs. (1)-(3)."""
+import numpy as np
+import pytest
+
+from repro.core.energy import (
+    LayerWork,
+    SystemModel,
+    battery_lifetime_years,
+    calibrate_t_ctrl,
+)
+from repro.core.hw import BSS2
+from repro.core.partition import plan_tiles
+
+# the ECG network of Fig. 6 (see DESIGN.md for the shape reconstruction)
+ECG_LAYERS = [
+    LayerWork(k=128, n=256),   # conv: 64 taps x 2ch -> 32 positions x 8ch
+    LayerWork(k=256, n=123),   # hidden, split into two chunks side by side
+    LayerWork(k=123, n=10),    # classifier (10 -> avg-pool -> 2)
+]
+
+
+class TestEquations:
+    def test_eq1_peak_ops(self):
+        np.testing.assert_allclose(BSS2.peak_ops, 32.768e12)
+
+    def test_eq2_sustained_ops(self):
+        np.testing.assert_allclose(BSS2.sustained_ops, 52.4288e9)
+
+    def test_eq3_area_efficiency(self):
+        np.testing.assert_allclose(
+            BSS2.area_efficiency_top_s_mm2, 2.6, rtol=0.01
+        )
+
+
+class TestTable1:
+    @pytest.fixture()
+    def model(self):
+        return SystemModel()
+
+    def test_total_cdnn_ops(self):
+        ops = sum(2 * l.macs for l in ECG_LAYERS)
+        np.testing.assert_allclose(ops, BSS2.ops_per_inference, rtol=0.01)
+
+    def test_time_per_inference(self, model):
+        t = model.time_per_inference(ECG_LAYERS)
+        np.testing.assert_allclose(t, BSS2.time_per_inference_s, rtol=0.005)
+
+    def test_processing_speed(self, model):
+        r = model.report(ECG_LAYERS)
+        np.testing.assert_allclose(
+            r["ops_per_s"], BSS2.processing_speed_ops, rtol=0.01
+        )
+
+    def test_energy_totals(self, model):
+        r = model.report(ECG_LAYERS)
+        np.testing.assert_allclose(
+            r["energy_total_j"], BSS2.energy_total_j, rtol=0.01
+        )
+        np.testing.assert_allclose(
+            r["energy_asic_j"], BSS2.energy_asic_j, rtol=0.01
+        )
+
+    def test_energy_efficiency(self, model):
+        r = model.report(ECG_LAYERS)
+        np.testing.assert_allclose(
+            r["ops_per_j"], BSS2.energy_eff_op_per_j, rtol=0.01
+        )
+        np.testing.assert_allclose(
+            r["inferences_per_j"], BSS2.energy_eff_inf_per_j, rtol=0.01
+        )
+
+    def test_calibration_is_io_dominated(self):
+        """Paper §V: analog compute is a tiny fraction; the FPGA/control path
+        dominates - our calibrated constant must reflect that."""
+        t_ctrl = calibrate_t_ctrl(ECG_LAYERS)
+        assert t_ctrl > 0.8 * BSS2.time_per_inference_s
+
+    def test_battery_lifetime_five_years(self, model):
+        r = model.report(ECG_LAYERS)
+        years = battery_lifetime_years(r["energy_total_j"])
+        assert 4.5 < years < 6.5  # paper: "for five years"
+
+
+class TestPartitioner:
+    def test_single_tile(self):
+        g = plan_tiles(128, 512)
+        assert g.n_tiles == 1 and g.utilization == 1.0
+
+    def test_row_chunking(self):
+        g = plan_tiles(256, 123)
+        assert g.row_chunks == 2 and g.col_tiles == 1
+
+    def test_big_layer(self):
+        # glm4-9b FFN up-proj: 4096 -> 13696
+        g = plan_tiles(4096, 13696)
+        assert g.row_chunks == 32
+        assert g.col_tiles == 27
+        assert g.n_tiles == 864
+        assert 0.9 < g.utilization <= 1.0
+
+    def test_passes_scale_down_with_chips(self):
+        g = plan_tiles(4096, 13696)
+        assert g.passes_serial(chips=64) == -(-g.n_tiles // 64)

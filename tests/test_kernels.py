@@ -1,0 +1,132 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle over
+shape/dtype sweeps, as required for every kernel in kernels/."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref as R
+from repro.kernels.analog_mvm import analog_mvm_pallas
+from repro.kernels.preproc import maxmin_pool_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+MVM_SHAPES = [
+    (1, 128, 1),
+    (8, 128, 64),
+    (100, 384, 700),     # non-aligned M/N, 3 chunks
+    (256, 256, 512),     # exactly one BSS-2 tile grid
+    (17, 512, 129),
+    (64, 1024, 256),
+]
+
+
+def _mvm_inputs(m, k, n, dtype=jnp.float32, with_noise=True):
+    ka, kw, kg, ko = jax.random.split(jax.random.fold_in(KEY, m * k + n), 4)
+    a = jnp.round(jax.random.uniform(ka, (m, k)) * 31).astype(dtype)
+    w = jnp.round(
+        jax.random.uniform(kw, (k, n), minval=-1, maxval=1) * 63
+    ).astype(dtype)
+    if with_noise:
+        w = w * (1 + 0.02 * jax.random.normal(kg, (k, n))).astype(dtype)
+    gain = jnp.full((n,), 0.02, jnp.float32)
+    off = jax.random.normal(ko, (k // 128, n), jnp.float32)
+    return a, w, gain, off
+
+
+class TestAnalogMVMKernel:
+    @pytest.mark.parametrize("m,k,n", MVM_SHAPES)
+    @pytest.mark.parametrize("faithful", [True, False])
+    def test_fp32_exact_vs_oracle(self, m, k, n, faithful):
+        a, w, gain, off = _mvm_inputs(m, k, n)
+        got = analog_mvm_pallas(
+            a, w, gain, off, faithful=faithful, interpret=True
+        )
+        want = R.analog_mvm_ref(a, w, gain, off, faithful=faithful)
+        tol = 0.0 if faithful else 1.0   # fast mode: summation-order LSB
+        assert float(jnp.abs(got - want).max()) <= tol
+
+    @pytest.mark.parametrize("m,k,n", [(8, 128, 64), (64, 256, 256)])
+    def test_bf16_within_one_lsb(self, m, k, n):
+        """bf16 MXU path: codes are exact; fpn gain rounding costs <= 1 ADC
+        LSB per chunk vs the fp32 oracle."""
+        a, w, gain, off = _mvm_inputs(m, k, n)
+        got = analog_mvm_pallas(
+            a, w, gain, off, faithful=True, interpret=True,
+            compute_dtype=jnp.bfloat16,
+        )
+        want = R.analog_mvm_ref(a, w, gain, off, faithful=True)
+        n_chunks = k // 128
+        assert float(jnp.abs(got - want).max()) <= n_chunks
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_input_dtypes(self, dtype):
+        a, w, gain, off = _mvm_inputs(16, 256, 128, dtype=dtype,
+                                      with_noise=False)
+        got = analog_mvm_pallas(a, w, gain, off, interpret=True)
+        want = R.analog_mvm_ref(
+            a.astype(jnp.float32), w.astype(jnp.float32), gain, off
+        )
+        assert float(jnp.abs(got - want).max()) == 0.0
+
+    def test_none_offset(self):
+        a, w, gain, _ = _mvm_inputs(8, 256, 64)
+        got = analog_mvm_pallas(a, w, gain, None, interpret=True)
+        want = R.analog_mvm_ref(a, w, gain, None)
+        assert float(jnp.abs(got - want).max()) == 0.0
+
+    @pytest.mark.parametrize("block_m,block_n", [(128, 128), (256, 512),
+                                                 (512, 256)])
+    def test_block_shape_invariance(self, block_m, block_n):
+        a, w, gain, off = _mvm_inputs(100, 384, 300)
+        got = analog_mvm_pallas(
+            a, w, gain, off, block_m=block_m, block_n=block_n, interpret=True
+        )
+        want = R.analog_mvm_ref(a, w, gain, off)
+        assert float(jnp.abs(got - want).max()) == 0.0
+
+    def test_output_is_integer_valued_and_bounded(self):
+        a, w, gain, off = _mvm_inputs(32, 512, 64)
+        y = np.asarray(analog_mvm_pallas(a, w, gain, off, interpret=True))
+        np.testing.assert_array_equal(y, np.round(y))
+        c = 512 // 128
+        assert y.min() >= -128 * c and y.max() <= 127 * c
+
+    def test_custom_vjp_hil_gradient(self):
+        a, w, gain, _ = _mvm_inputs(16, 256, 32, with_noise=False)
+
+        def loss(a, w, gain):
+            return (ops.analog_mvm(a, w, gain, None, 128, True, False) ** 2).sum()
+
+        da, dw, dg = jax.grad(loss, argnums=(0, 1, 2))(a, w, gain)
+        # HIL gradient == gradient of the linearization y = gain * a @ w
+        y = ops.analog_mvm(a, w, gain, None, 128, True, False)
+        g = 2 * y
+        np.testing.assert_allclose(np.asarray(da), np.asarray((g * gain) @ w.T),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(dw), np.asarray(a.T @ (g * gain)),
+                                   rtol=1e-5)
+
+
+class TestMaxMinPoolKernel:
+    @pytest.mark.parametrize("b,t,window", [(1, 128, 32), (5, 4096, 32),
+                                            (16, 1024, 16), (3, 96, 32)])
+    def test_vs_oracle(self, b, t, window):
+        x = jax.random.normal(jax.random.fold_in(KEY, b * t), (b, t))
+        got = maxmin_pool_pallas(x, window=window, interpret=True)
+        want = R.maxmin_pool_ref(x, window=window)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_nonneg_output(self):
+        x = jax.random.normal(KEY, (4, 512))
+        y = ops.maxmin_pool(x, 32, use_pallas=False)
+        assert float(y.min()) >= 0.0  # max - min >= 0: positive activations
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+    def test_dtypes(self, dtype):
+        x = (jax.random.normal(KEY, (2, 256)) * 100).astype(dtype)
+        got = maxmin_pool_pallas(x, window=32, interpret=True)
+        want = R.maxmin_pool_ref(x, window=32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert got.dtype == dtype

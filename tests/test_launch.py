@@ -1,0 +1,125 @@
+"""Launch-layer tests: mesh construction, dry-run input specs, collective
+parsing, and roofline analytics (all CPU-cheap; the actual 512-device
+lowering runs via launch/dryrun.py and is recorded in EXPERIMENTS.md)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import SHAPES, RunConfig
+
+
+class TestMesh:
+    def test_mesh_shapes(self):
+        """make_production_mesh geometry (validated without building: the
+        512-device build happens in the dry-run process)."""
+        from repro.launch import mesh as M
+        import inspect
+
+        src = inspect.getsource(M.make_production_mesh)
+        assert "(2, 16, 16)" in src and "(16, 16)" in src
+        assert '("pod", "data", "model")' in src
+
+    def test_host_mesh(self):
+        from repro.launch.mesh import make_host_mesh
+
+        m = make_host_mesh()
+        assert m.axis_names == ("data",)
+
+
+class TestCollectiveParsing:
+    def test_parse_known_ops(self):
+        from repro.launch.dryrun import parse_collectives
+
+        hlo = "\n".join([
+            "%ag = bf16[16,1024]{1,0} all-gather(%p0), dims={0}",
+            "%ar = f32[256]{0} all-reduce(%p1), to_apply=%sum",
+            "%rs = f32[4,4]{1,0} reduce-scatter(%p2), dims={0}",
+            "%a2a = bf16[8,8]{1,0} all-to-all(%p3), dims={0}",
+            "  operand_ref = bf16[9,9]{1,0} add(%x, %y)",  # not a collective
+        ])
+        out = parse_collectives(hlo)
+        assert out["counts"] == {
+            "all-gather": 1, "all-reduce": 1, "reduce-scatter": 1,
+            "all-to-all": 1,
+        }
+        # all-reduce counted at 2x bytes (reduce-scatter + all-gather)
+        assert out["bytes_per_op"]["all-reduce"] == 256 * 4 * 2
+        assert out["bytes_per_op"]["all-gather"] == 16 * 1024 * 2
+
+    def test_total(self):
+        from repro.launch.dryrun import parse_collectives
+
+        assert parse_collectives("no collectives here")["total_bytes"] == 0
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("shape", ["train_4k", "prefill_32k",
+                                       "decode_32k"])
+    def test_shapes_are_abstract(self, shape):
+        from repro.launch.dryrun import input_specs
+
+        cfg, sh, args = input_specs("glm4-9b", shape, RunConfig())
+        leaves = jax.tree.leaves(
+            args, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+        )
+        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+        if sh.kind == "train":
+            tokens = args[1]["tokens"]
+            assert tokens.shape == (sh.global_batch, sh.seq_len)
+
+    def test_embed_input_archs_get_embeds(self):
+        from repro.launch.dryrun import input_specs
+
+        cfg, sh, args = input_specs("musicgen-medium", "train_4k",
+                                    RunConfig())
+        assert "embeds" in args[1]
+        assert args[1]["embeds"].shape == (256, 4096, cfg.d_model)
+
+    def test_long_500k_only_subquadratic(self):
+        assert set(
+            a for a in configs.ARCH_NAMES if "long_500k" in configs.cells(a)
+        ) == {"rwkv6-7b", "zamba2-2.7b"}
+
+
+class TestRooflineAnalytics:
+    def test_model_flops_formulas(self):
+        from benchmarks.roofline import model_flops
+
+        cfg = configs.get_arch("glm4-9b")
+        n = cfg.active_param_count()
+        sh = SHAPES["train_4k"]
+        np.testing.assert_allclose(
+            model_flops("glm4-9b", "train_4k"), 6.0 * n * sh.tokens
+        )
+        np.testing.assert_allclose(
+            model_flops("glm4-9b", "decode_32k"), 2.0 * n * 128
+        )
+
+    def test_analytic_flops_exceeds_model_flops_for_train(self):
+        from benchmarks.roofline import analytic_flops, model_flops
+
+        for arch in ("glm4-9b", "qwen3-moe-30b-a3b", "rwkv6-7b"):
+            a = analytic_flops(arch, "train_4k")
+            m = model_flops(arch, "train_4k")
+            assert a > m  # remat + attention overhead
+            assert a < 4 * m  # but bounded by the remat multiplicity
+
+    def test_analog_mode_adds_pass(self):
+        from benchmarks.roofline import analytic_flops
+
+        d = analytic_flops("glm4-9b", "train_4k", "digital")
+        a = analytic_flops("glm4-9b", "train_4k", "analog_faithful")
+        assert a > 1.3 * d
+
+
+class TestEnergyProjection:
+    def test_throughput_projection_all_archs(self):
+        from benchmarks.throughput import project_arch
+
+        for name in configs.ARCH_NAMES:
+            r = project_arch(name, chips=512)
+            assert r["tiles"] > 0
+            assert 0.5 < r["tile_util"] <= 1.0
+            assert r["tok/s@512chip"] > r["tok/s@1chip"]

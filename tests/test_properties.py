@@ -1,0 +1,138 @@
+"""Hypothesis property tests on system invariants of the analog substrate
+(beyond the example-based tests): scale equivariance, padding invariance,
+saturation monotonicity, noise statistics, and partitioner arithmetic."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import quant
+from repro.core.analog import AnalogConfig, analog_matmul
+from repro.core.noise import NOISELESS
+from repro.core.hw import BSS2
+from repro.core.partition import plan_tiles
+
+hypothesis.settings.register_profile(
+    "props", deadline=None, max_examples=20, derandomize=True
+)
+hypothesis.settings.load_profile("props")
+
+CFG = AnalogConfig(noise=NOISELESS)
+dims = st.integers(1, 3).map(lambda k: k * 128)
+
+
+class TestAnalogMatmulProperties:
+    @given(dims, st.integers(1, 64), st.integers(0, 2**31 - 1))
+    def test_zero_input_zero_output(self, k, n, seed):
+        w = jnp.round(
+            jax.random.normal(jax.random.PRNGKey(seed), (k, n)) * 20
+        )
+        y = analog_matmul(jnp.zeros((2, k)), w, 0.02, None, None, CFG)
+        np.testing.assert_array_equal(np.asarray(y), 0.0)
+
+    @given(st.integers(0, 2**31 - 1))
+    def test_k_padding_invariance(self, seed):
+        """Appending zero activation rows (and any weights under them) never
+        changes the result - tiles are only driven by real events."""
+        key = jax.random.PRNGKey(seed)
+        a = jnp.round(jax.random.uniform(key, (4, 200)) * 31)
+        w = jnp.round(jax.random.normal(key, (200, 32)) * 20)
+        y1 = analog_matmul(a, w, 0.02, None, None, CFG)
+        a_pad = jnp.pad(a, ((0, 0), (0, 56)))
+        w_pad = jnp.pad(w, ((0, 56), (0, 0)),
+                        constant_values=63.0)  # garbage under zero events
+        y2 = analog_matmul(a_pad, w_pad, 0.02, None, None, CFG)
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+    @given(st.integers(0, 2**31 - 1))
+    def test_output_bounded_by_chunks(self, seed):
+        key = jax.random.PRNGKey(seed)
+        a = jnp.round(jax.random.uniform(key, (4, 384)) * 31)
+        w = jnp.round(jax.random.normal(key, (384, 16)) * 40)
+        y = np.asarray(analog_matmul(a, w, 1.0, None, None, CFG))
+        c = 384 // 128
+        assert y.min() >= BSS2.adc_min * c and y.max() <= BSS2.adc_max * c
+
+    @given(st.integers(0, 2**31 - 1))
+    def test_monotone_in_gain_until_saturation(self, seed):
+        """For all-positive weights, increasing gain never decreases any
+        output (saturation is monotone)."""
+        key = jax.random.PRNGKey(seed)
+        a = jnp.round(jax.random.uniform(key, (2, 128)) * 31)
+        w = jnp.round(jax.random.uniform(key, (128, 8)) * 63)
+        ys = [
+            np.asarray(analog_matmul(a, w, g, None, None, CFG))
+            for g in (0.001, 0.01, 0.1, 1.0)
+        ]
+        for lo, hi in zip(ys, ys[1:]):
+            assert (hi >= lo - 1e-6).all()
+
+    @given(st.integers(0, 2**31 - 1))
+    def test_faithful_vs_fast_agree_without_saturation(self, seed):
+        key = jax.random.PRNGKey(seed)
+        a = jnp.round(jax.random.uniform(key, (3, 256)) * 31)
+        w = jnp.round(jax.random.normal(key, (256, 8)) * 10)
+        gain = 0.005  # tiny partials: no chunk saturates
+        y1 = analog_matmul(a, w, gain, None, None, CFG)
+        y2 = analog_matmul(a, w, gain, None, None,
+                           CFG.replace(mode="analog_fast"))
+        assert float(jnp.abs(y1 - y2).max()) <= 2.0  # rounding only
+
+
+class TestQuantProperties:
+    @given(st.floats(2.0**-6, 8.0, width=32), st.integers(0, 2**31 - 1))
+    def test_act_quant_idempotent(self, scale, seed):
+        x = jax.random.uniform(
+            jax.random.PRNGKey(seed), (32,), minval=0.0, maxval=scale * 31
+        )
+        q1 = quant.quantize_act(x, scale)
+        q2 = quant.quantize_act(q1 * scale, scale)
+        np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=0)
+
+    @given(st.integers(0, 2**31 - 1))
+    def test_weight_quant_sign_symmetric(self, seed):
+        w = jax.random.normal(jax.random.PRNGKey(seed), (64, 8))
+        s = quant.calibrate_weight_scale(w)
+        np.testing.assert_array_equal(
+            np.asarray(quant.quantize_weight(-w, s)),
+            -np.asarray(quant.quantize_weight(w, s)),
+        )
+
+
+class TestNoiseStatistics:
+    def test_rank1_gain_std_close_to_spec(self):
+        from repro.core.noise import NoiseConfig, effective_weight, \
+            init_fixed_pattern
+
+        cfg = NoiseConfig(gain_std=0.02, mode="rank1")
+        fpn = init_fixed_pattern(jax.random.PRNGKey(0), 512, 512, 4, cfg)
+        w = jnp.ones((512, 512))
+        eff = np.asarray(effective_weight(w, fpn))
+        assert abs(eff.std() - 0.02) < 0.005
+        assert abs(eff.mean() - 1.0) < 0.005
+
+    def test_full_mode_per_synapse(self):
+        from repro.core.noise import NoiseConfig, init_fixed_pattern
+
+        cfg = NoiseConfig(gain_std=0.02, mode="full")
+        fpn = init_fixed_pattern(jax.random.PRNGKey(1), 64, 32, 1, cfg)
+        assert fpn["gain"].shape == (64, 32)
+
+
+class TestPartitionerProperties:
+    @given(st.integers(1, 8192), st.integers(1, 16384))
+    def test_tiles_cover_matrix(self, k, n):
+        g = plan_tiles(k, n)
+        assert g.k_pad >= k and g.n_pad >= n
+        assert g.k_pad - k < BSS2.signed_rows
+        assert g.n_pad - n < BSS2.n_cols
+        assert g.n_tiles == g.row_chunks * g.col_tiles
+        assert 0 < g.utilization <= 1.0
+
+    @given(st.integers(1, 4096), st.integers(1, 4096), st.integers(1, 64))
+    def test_passes_monotone_in_chips(self, k, n, chips):
+        g = plan_tiles(k, n)
+        assert g.passes_serial(chips) <= g.passes_serial(1)
+        assert g.passes_serial(chips) >= g.n_tiles // max(chips, 1)

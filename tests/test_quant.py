@@ -1,0 +1,93 @@
+"""Unit + property tests for the BSS-2 quantizers (paper Fig. 4 datapath)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis.extra import numpy as hnp
+
+from repro.core import quant
+from repro.core.hw import BSS2
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+floats = st.floats(-100.0, 100.0, allow_nan=False, width=32)
+
+
+class TestActQuant:
+    def test_range(self):
+        x = jnp.linspace(-5, 5, 101)
+        q = quant.quantize_act(x, jnp.asarray(0.1))
+        assert float(q.min()) >= 0.0
+        assert float(q.max()) <= BSS2.a_max
+        np.testing.assert_array_equal(q, jnp.round(q))  # integer codes
+
+    @given(hnp.arrays(np.float32, (16,), elements=floats),
+           st.floats(2.0**-10, 10.0, width=32))
+    def test_roundtrip_error_bounded(self, x, scale):
+        x = jnp.asarray(x)
+        q = quant.quantize_act(x, scale)
+        deq = quant.dequantize_act(q, scale)
+        in_range = (x >= 0) & (x <= scale * BSS2.a_max)
+        err = jnp.abs(deq - x)
+        assert float(jnp.where(in_range, err, 0.0).max()) <= scale / 2 + 1e-5
+
+    def test_ste_gradient_masks_saturation(self):
+        scale = 0.1
+
+        def f(x):
+            return quant.quantize_act(x, scale).sum()
+
+        g = jax.grad(f)(jnp.asarray([-1.0, 0.15, 10.0]))
+        # below range and above range: zero grad; inside: 1/scale
+        assert g[0] == 0.0 and g[2] == 0.0
+        np.testing.assert_allclose(g[1], 1.0 / scale, rtol=1e-6)
+
+
+class TestWeightQuant:
+    def test_range_and_integrality(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+        s = quant.calibrate_weight_scale(w)
+        q = quant.quantize_weight(w, s)
+        assert float(jnp.abs(q).max()) <= BSS2.w_max
+        np.testing.assert_array_equal(q, jnp.round(q))
+
+    def test_per_column_scale_uses_full_range(self):
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 8)) * jnp.logspace(
+            -2, 1, 8
+        )
+        s = quant.calibrate_weight_scale(w, per_column=True)
+        q = quant.quantize_weight(w, s)
+        # every column should reach the top code (its max maps to w_max)
+        col_max = jnp.abs(q).max(axis=0)
+        np.testing.assert_array_equal(col_max, np.full(8, BSS2.w_max))
+
+
+class TestADC:
+    def test_saturation(self):
+        v = jnp.asarray([-1000.0, -128.4, 0.3, 127.4, 1000.0])
+        out = quant.adc_readout(v)
+        np.testing.assert_array_equal(out, [-128, -128, 0, 127, 127])
+
+    @given(hnp.arrays(np.float32, (8,), elements=floats))
+    def test_integer_output(self, v):
+        out = np.asarray(quant.adc_readout(jnp.asarray(v)))
+        np.testing.assert_array_equal(out, np.round(out))
+        assert out.min() >= BSS2.adc_min and out.max() <= BSS2.adc_max
+
+
+class TestRequantize:
+    def test_right_shift_semantics(self):
+        # paper II-A: subtract V_reset then bitwise right-shift -> 5 bit
+        adc = jnp.arange(0, 128, dtype=jnp.float32)
+        out = quant.requantize_5bit(adc, shift=2)
+        np.testing.assert_array_equal(out, np.minimum(np.arange(128) // 4, 31))
+
+    def test_negative_clips_to_zero(self):
+        out = quant.requantize_5bit(jnp.asarray([-64.0, -1.0]), shift=1)
+        np.testing.assert_array_equal(out, [0.0, 0.0])
