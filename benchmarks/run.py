@@ -1,5 +1,5 @@
 """Benchmark driver: one benchmark per paper table/figure + the roofline
-report.  ``PYTHONPATH=src python -m benchmarks.run [--full]``
+report.  ``PYTHONPATH=src python -m benchmarks.run [--full | --smoke]``
 
 | benchmark            | paper artifact                    |
 |----------------------|-----------------------------------|
@@ -8,10 +8,14 @@ report.  ``PYTHONPATH=src python -m benchmarks.run [--full]``
 | ecg_accuracy         | §IV / Fig. 8 classification       |
 | kernels_micro        | (framework) Pallas kernel checks  |
 | roofline             | §Roofline dry-run analysis        |
+
+``--smoke`` runs the CI subset (kernel checks + the exec-layer
+plan-vs-percall throughput) and writes the numbers to BENCH_smoke.json.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -44,20 +48,48 @@ def kernels_micro() -> None:
     print(f"maxmin_pool,{dt:.0f}us,exact={bool((got == want).all())}")
 
 
+def smoke() -> None:
+    """CI subset: kernel sanity + the exec-layer speedup, dumped to
+    BENCH_smoke.json so the plan-cached vs per-call numbers land in the
+    benchmark artifacts."""
+    from benchmarks import throughput
+
+    t0 = time.time()
+    kernels_micro()
+    pc = throughput.plan_vs_percall_throughput(iters=5)
+    print("\n== plan-cached vs per-call requantize (exec layer) ==")
+    print(f"{pc['shape']}: dispatches={pc['dispatches']} "
+          f"plan {pc['plan_speedup']:.2f}x, "
+          f"plan+fused {pc['fused_speedup']:.2f}x")
+    out = {"plan_vs_percall": pc, "wall_s": time.time() - t0}
+    with open("BENCH_smoke.json", "w") as f:
+        json.dump(out, f, indent=2, default=float)
+    print(f"\nsmoke benchmarks done in {out['wall_s']:.0f}s "
+          f"-> BENCH_smoke.json")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full-size ECG training run (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick CI subset -> BENCH_smoke.json")
     args = ap.parse_args()
+
+    if args.smoke:
+        smoke()
+        return
 
     t0 = time.time()
     from benchmarks import ecg_accuracy, roofline, table1_energy, throughput
 
     bad = table1_energy.main()
-    throughput.main()
+    pc = throughput.main()
     kernels_micro()
     ecg_accuracy.main(fast=not args.full)
     roofline.main()
+    with open("BENCH_full.json", "w") as f:
+        json.dump({"plan_vs_percall": pc}, f, indent=2, default=float)
     print(f"\nbenchmarks done in {time.time() - t0:.0f}s; "
           f"table1 rows off by >2%: {bad}")
     if bad:

@@ -86,6 +86,81 @@ def project_arch(name: str, chips: int = 512) -> dict:
     }
 
 
+def plan_vs_percall_throughput(iters: int = 10) -> dict:
+    """Plan-cached vs per-call-requantize emulation throughput (ISSUE 1).
+
+    Same 3-layer split-encoded analog stack, three execution strategies:
+    - ``percall``: the legacy path - every forward re-derives w_code /
+      w_eff / offsets and dispatches TWO analog passes per layer,
+    - ``plan``: lower once, run many - requantization baked, still
+      two-pass split,
+    - ``plan_fused``: lower once + the fused signed-split kernel - half
+      the analog dispatches per layer.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.analog import (
+        AnalogConfig, analog_linear_apply, analog_linear_init,
+    )
+    from repro.core.noise import NOISELESS
+    from repro.exec.lower import lower_stack
+    from repro.exec.run import dispatch_count, reset_dispatch_count
+    from repro.exec.run import run as run_plan
+
+    m, d = 256, 512
+    layers = [
+        analog_linear_init(jax.random.PRNGKey(i), d, d, noise=NOISELESS)
+        for i in range(3)
+    ]
+    x = jax.random.normal(jax.random.PRNGKey(9), (m, d)) * 0.3
+    macs = 3 * m * d * d
+
+    def percall(x):
+        h = x
+        for p in layers:
+            h = jax.nn.relu(analog_linear_apply(
+                p, h, AnalogConfig(noise=NOISELESS, fused_split=False)
+            ))
+        return h
+
+    cfg_two = AnalogConfig(noise=NOISELESS, fused_split=False)
+    cfg_fused = AnalogConfig(noise=NOISELESS)
+    plan_two = lower_stack(layers, cfg_two)
+    plan_fused = lower_stack(layers, cfg_fused)
+
+    variants = {
+        "percall": jax.jit(percall),
+        "plan": jax.jit(lambda x: run_plan(plan_two, x)),
+        "plan_fused": jax.jit(lambda x: run_plan(plan_fused, x)),
+    }
+    dispatches = {}
+    for name, cfg in (("percall", None), ("plan", plan_two),
+                      ("plan_fused", plan_fused)):
+        reset_dispatch_count()
+        if cfg is None:
+            percall(x)
+        else:
+            run_plan(cfg, x)
+        dispatches[name] = dispatch_count()
+
+    out = {"shape": f"3x[{m}x{d}x{d}]", "dispatches": dispatches}
+    for name, f in variants.items():
+        for _ in range(3):
+            f(x).block_until_ready()          # warmup past compile + jitter
+        best = float("inf")
+        for _ in range(4):                    # best-of-blocks vs CPU noise
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                f(x).block_until_ready()
+            best = min(best, (time.perf_counter() - t0) / iters)
+        out[f"{name}_us"] = best * 1e6
+        out[f"{name}_GOp/s"] = 2 * macs / best / 1e9
+    out["plan_speedup"] = out["percall_us"] / out["plan_us"]
+    out["fused_speedup"] = out["percall_us"] / out["plan_fused_us"]
+    return out
+
+
 def emulation_throughput() -> dict:
     """Host-side emulation speed of the faithful analog matmul (ref path)."""
     import jax
@@ -135,6 +210,18 @@ def main() -> None:
     print("\n== host emulation throughput (faithful analog matmul, CPU) ==")
     print(f"{e['shape']}: {e['us_per_call']:.0f} us/call "
           f"({e['emulated_GOp/s']:.2f} emulated GOp/s)")
+
+    pc = plan_vs_percall_throughput()
+    print("\n== plan-cached vs per-call requantize (exec layer, ISSUE 1) ==")
+    print(f"{pc['shape']}: percall {pc['percall_us']:.0f}us "
+          f"({pc['dispatches']['percall']} dispatches) | "
+          f"plan {pc['plan_us']:.0f}us "
+          f"({pc['dispatches']['plan']}) | "
+          f"plan+fused-split {pc['plan_fused_us']:.0f}us "
+          f"({pc['dispatches']['plan_fused']})")
+    print(f"speedup: plan {pc['plan_speedup']:.2f}x, "
+          f"plan+fused {pc['fused_speedup']:.2f}x")
+    return pc
 
 
 if __name__ == "__main__":

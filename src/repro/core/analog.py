@@ -55,6 +55,9 @@ class AnalogConfig:
     noise: NoiseConfig = dataclasses.field(default_factory=NoiseConfig)
     deterministic: bool = True      # no temporal readout noise (standalone mode)
     use_pallas: bool = False        # dispatch hot loop to the Pallas kernel
+    fused_split: bool = True        # one fused kernel for signed-split pairs
+    fused_epilogue: bool = False    # emit ADC epilogues inside the kernel
+    #                                 (inference-only; needs use_pallas)
 
     def replace(self, **kw) -> "AnalogConfig":
         return dataclasses.replace(self, **kw)
@@ -266,64 +269,36 @@ def analog_linear_apply(
     *,
     key: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Apply one analog (or digital) linear layer: x [..., K] -> y [..., N]."""
-    w = params["w"]
+    """Apply one analog (or digital) linear layer: x [..., K] -> y [..., N].
+
+    Thin single-layer wrapper over the exec plan pipeline: the parameters
+    are lowered to a one-layer :class:`repro.exec.plan.LayerPlan` (STE
+    quantizers, so HIL gradients reach the float masters) and executed by
+    :func:`repro.exec.run.run_layer`.  Call sites that run many forwards
+    per weight update should lower once via :mod:`repro.exec.lower`
+    (or :func:`repro.exec.lower.prelower_tree` for whole param trees - the
+    serve engine does) and reuse the plan; a pre-lowered ``"_plan"`` entry
+    in ``params`` is picked up here automatically.
+    """
     if cfg.mode == "digital":
-        y = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+        y = jnp.einsum("...k,kn->...n", x, params["w"].astype(x.dtype))
         if "b" in params:
             y = y + params["b"].astype(y.dtype)
         return y
 
-    in_dtype = x.dtype
-    x = x.astype(jnp.float32)
-    w = w.astype(jnp.float32)
-    if cfg.act_calib == "dynamic":
-        # per-call abs-max calibration (the role of the FPGA preprocessing /
-        # SIMD-CPU right-shift choice on hardware): robust for arbitrary
-        # activation statistics in the LM integration
-        a_scale = quant.act_scale_from_max(
-            jax.lax.stop_gradient(jnp.abs(x)).max() + 1e-9
-        )
-    else:
-        a_scale = params["a_scale"]
-    w_scale = params["w_scale"]
-    gain = params["gain"]
-    w_code = quant.quantize_weight(w, w_scale)
-    fpn = params.get("fpn", {})
-    w_eff = noise_lib.effective_weight(w_code, fpn)
-    n_chunks = -(-w.shape[0] // cfg.chunk_rows)
-    chunk_off = noise_lib.chunk_offsets(fpn, n_chunks, w.shape[1])
-    rk = None if (cfg.deterministic or key is None) else key
+    from repro.exec.lower import lower_layer
+    from repro.exec.run import run_layer
 
-    if cfg.signed_input == "none":
-        a_code = quant.quantize_act(x, a_scale)
-        y_int = analog_matmul(a_code, w_eff, gain, chunk_off, rk, cfg)
-    elif cfg.signed_input == "split":
-        # two analog passes: positive and negative parts on the same tiles
-        a_pos = quant.quantize_act(x, a_scale)
-        a_neg = quant.quantize_act(-x, a_scale)
-        k1, k2 = (None, None) if rk is None else tuple(jax.random.split(rk))
-        y_int = analog_matmul(a_pos, w_eff, gain, chunk_off, k1, cfg) - \
-            analog_matmul(a_neg, w_eff, gain, chunk_off, k2, cfg)
-    elif cfg.signed_input == "offset":
-        # beyond-paper: single pass with offset-encoded activations and a
-        # digital correction term  y = (a + h) @ W - h * colsum(W).
-        # The signed range folds into [0, 31], so the LSB doubles, and the
-        # gain is derated because the common-mode +h term consumes ADC
-        # headroom (per-layer calibration choice, cf. Weis et al.).
-        half = (BSS2.a_max + 1) // 2
-        a_scale = a_scale * 2.0
-        rms = cfg.act_rms_codes
-        gain = gain * rms / jnp.sqrt(rms**2 + float(half) ** 2)
-        a_code = jnp.clip(
-            quant._round_ste(x / a_scale) + half, 0.0, float(BSS2.a_max)
-        )
-        y_int = analog_matmul(a_code, w_eff, gain, chunk_off, rk, cfg)
-        y_int = y_int - gain * half * w_eff.sum(axis=0)
-    else:
-        raise ValueError(f"unknown signed_input {cfg.signed_input!r}")
-
-    y = y_int * (a_scale * w_scale.reshape(-1) / gain)
-    if "b" in params:
-        y = y + params["b"]
-    return y.astype(in_dtype)
+    lp = params.get("_plan")
+    if lp is not None and (
+        lp.signed_input != cfg.signed_input
+        or lp.chunk_rows != cfg.chunk_rows
+    ):
+        # the pre-lowered plan baked different static execution attrs
+        # than this call site requests (e.g. a signed_input override on a
+        # prelowered tree): fall back to per-call lowering rather than
+        # silently running the baked encoding
+        lp = None
+    if lp is None:
+        lp = lower_layer(params, cfg)
+    return run_layer(lp, x, cfg, key=key)

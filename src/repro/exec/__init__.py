@@ -1,0 +1,30 @@
+"""Execution subsystem: compile-once/run-many plans for analog layers.
+
+    plan  - AnalogPlan / LayerPlan frozen pytrees (the compiled schedule)
+    lower - lower(params, AnalogConfig) -> AnalogPlan  (weight quantize,
+            fixed-pattern bake, chunk padding, calibration - done once)
+    run   - run(plan, x) -> y  (the per-call hot path: activation
+            encoding, fused signed-split dispatch, ADC epilogues)
+
+See the module docstrings for the lifecycle contract (train re-lowers
+each step; serve/eval lower once and replay).
+"""
+from repro.exec.lower import (  # noqa: F401
+    lower,
+    lower_layer,
+    lower_stack,
+    prelower_tree,
+)
+from repro.exec.plan import (  # noqa: F401
+    EPILOGUE_NONE,
+    EPILOGUE_RELU_SHIFT,
+    AnalogPlan,
+    LayerPlan,
+    default_shift,
+)
+from repro.exec.run import (  # noqa: F401
+    dispatch_count,
+    reset_dispatch_count,
+    run,
+    run_layer,
+)

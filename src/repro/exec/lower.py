@@ -1,0 +1,161 @@
+"""Lowering: analog-layer parameters -> :class:`~repro.exec.plan.AnalogPlan`.
+
+This is the compile step of the compile-once/run-many split (hxtorch's
+layer-to-hardware lowering, Spilger et al. 2020; per-layer calibration,
+Weis et al. 2020).  Everything that depends only on the master weights and
+the frozen calibration state is computed HERE, once:
+
+- weight quantization to 6-bit codes (``quantize_weight``, STE - so a
+  ``jax.grad`` through ``lower`` + ``run`` reaches the float masters,
+  which is exactly the HIL training scheme: the train step re-lowers
+  every step, serve/eval lower once and replay),
+- fixed-pattern gain application (-> effective analog weights),
+- chunk padding of the weight matrix (the executor never re-pads K),
+- chunk-offset table lookup and the offset-encoding column-sum term.
+
+Per-call quantities (dynamic activation scale, readout-noise keys) stay in
+:mod:`repro.exec.run`.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core import noise as noise_lib
+from repro.core import quant
+from repro.core.analog import AnalogConfig, Params
+from repro.exec.plan import (
+    EPILOGUE_NONE,
+    EPILOGUE_RELU_SHIFT,
+    AnalogPlan,
+    LayerPlan,
+    default_shift,
+)
+
+
+def lower_layer(
+    params: Params,
+    cfg: AnalogConfig,
+    *,
+    signed_input: Optional[str] = None,
+    epilogue: str = EPILOGUE_NONE,
+    shift: Optional[int] = None,
+    flatten_out: bool = False,
+) -> LayerPlan:
+    """Lower ONE analog linear layer's parameters to a :class:`LayerPlan`.
+
+    ``signed_input`` overrides ``cfg.signed_input`` per layer (the ECG
+    stack runs every layer unsigned, LM blocks run split).  ``epilogue``
+    selects the inter-layer ADC treatment; ``shift`` defaults to the
+    range-matched right-shift for this layer's chunk count.
+    """
+    if epilogue not in (EPILOGUE_NONE, EPILOGUE_RELU_SHIFT):
+        raise ValueError(f"unknown epilogue {epilogue!r}")
+    if epilogue == EPILOGUE_RELU_SHIFT and params.get("b") is not None:
+        # a relu_shift layer hands off raw 5-bit codes - a float bias has
+        # no place to act (it would be silently dropped by the executor)
+        raise ValueError(
+            "bias is not representable in a relu_shift (code-domain) "
+            "hand-off; lower the layer without bias or with epilogue='none'"
+        )
+    w = params["w"].astype(jnp.float32)
+    k, n = w.shape
+    w_scale = params["w_scale"]
+    w_code = quant.quantize_weight(w, w_scale)
+    fpn = params.get("fpn", {})
+    w_eff = noise_lib.effective_weight(w_code, fpn)
+    n_chunks = -(-k // cfg.chunk_rows)
+    pad = n_chunks * cfg.chunk_rows - k
+    if pad:
+        w_eff = jnp.pad(w_eff, ((0, pad), (0, 0)))
+    chunk_off = noise_lib.chunk_offsets(fpn, n_chunks, n)
+    signed = cfg.signed_input if signed_input is None else signed_input
+    if shift is None:
+        shift = default_shift(n_chunks)
+    return LayerPlan(
+        w_eff=w_eff,
+        w_scale=w_scale,
+        a_scale=jnp.asarray(params["a_scale"], jnp.float32),
+        gain=jnp.asarray(params["gain"], jnp.float32),
+        chunk_offset=chunk_off,
+        colsum=w_eff.sum(axis=0) if signed == "offset" else None,
+        bias=params.get("b"),
+        k=k,
+        n=n,
+        chunk_rows=cfg.chunk_rows,
+        signed_input=signed,
+        epilogue=epilogue,
+        shift=shift,
+        flatten_out=flatten_out,
+    )
+
+
+def lower_stack(
+    layer_params: Sequence[Params],
+    cfg: AnalogConfig,
+    *,
+    signed_inputs: Optional[Sequence[Optional[str]]] = None,
+    epilogues: Optional[Sequence[str]] = None,
+    flatten_outs: Optional[Sequence[bool]] = None,
+) -> AnalogPlan:
+    """Lower an ordered stack of layers into one :class:`AnalogPlan`.
+
+    ``epilogues[i]`` is the ADC epilogue BETWEEN layer i and i+1; the last
+    layer's epilogue is forced to "none" (final outputs dequantize to
+    float logits).
+    """
+    n = len(layer_params)
+    signed_inputs = signed_inputs or [None] * n
+    epilogues = list(epilogues or [EPILOGUE_NONE] * n)
+    flatten_outs = flatten_outs or [False] * n
+    if n:
+        epilogues[-1] = EPILOGUE_NONE
+    layers = tuple(
+        lower_layer(
+            p, cfg, signed_input=s, epilogue=e, flatten_out=f,
+        )
+        for p, s, e, f in zip(layer_params, signed_inputs, epilogues,
+                              flatten_outs)
+    )
+    return AnalogPlan(layers=layers, cfg=cfg)
+
+
+def lower(params: Params, cfg: AnalogConfig, **kw) -> AnalogPlan:
+    """``lower(params, AnalogConfig) -> AnalogPlan`` for a single layer's
+    parameter dict (the ``analog_linear_apply`` contract) - the one-layer
+    specialization of :func:`lower_stack`."""
+    return AnalogPlan(layers=(lower_layer(params, cfg, **kw),), cfg=cfg)
+
+
+def _is_analog_layer(node) -> bool:
+    # Stacked variants (e.g. MoE experts [E, K, N]) are applied under vmap
+    # with per-expert 2-D slices; they lower per call, not here.
+    return (
+        isinstance(node, dict)
+        and "w" in node and "w_scale" in node and "gain" in node
+        and getattr(node["w"], "ndim", 0) == 2
+    )
+
+
+def prelower_tree(params, cfg: AnalogConfig):
+    """Pre-lower every analog layer in an arbitrary params pytree
+    (inference/serve path): each analog-layer dict gains a ``"_plan"``
+    entry holding its :class:`LayerPlan`, which ``analog_linear_apply``
+    picks up instead of re-deriving ``w_code``/``w_eff``/offsets on every
+    forward.  The result is still a params pytree (plans are pytrees), so
+    it flows through the jitted serve steps unchanged.
+
+    Inference-only: gradients taken against a pre-lowered tree stop at the
+    baked ``w_eff`` instead of reaching ``w`` - the train step must lower
+    from the float masters each step instead (see module docstring).
+    """
+    if _is_analog_layer(params):
+        out = dict(params)
+        out["_plan"] = lower_layer(params, cfg)
+        return out
+    if isinstance(params, dict):
+        return {k: prelower_tree(v, cfg) for k, v in params.items()}
+    if isinstance(params, (list, tuple)):
+        return type(params)(prelower_tree(v, cfg) for v in params)
+    return params

@@ -1,0 +1,132 @@
+"""Compiled execution plans for stacks of analog layers.
+
+The paper executes its network as a *pre-compiled schedule* of chunked
+analog VMM passes on fixed synapse tiles (Fig. 4, §II-C): weights are
+quantized, calibrated and placed ONCE, then inference replays the schedule.
+This module is the software mirror of that split:
+
+- :class:`LayerPlan` - one analog layer after lowering: the quantized
+  effective weights (``w_eff``, already padded to a whole number of
+  128-row chunks), the dequantization scales, the calibrated gain, the
+  frozen fixed-pattern chunk offsets, and the static execution attributes
+  (signed encoding, epilogue, chunk geometry).
+- :class:`AnalogPlan` - an ordered stack of :class:`LayerPlan` that runs
+  as one jitted analog program (see :mod:`repro.exec.run`).
+
+Both are registered JAX pytrees: the array fields are leaves (so a plan
+flows through ``jax.jit`` / ``jax.grad`` / donation like any params tree
+and re-running a cached executable needs NO retracing), while the
+execution attributes are hashable static metadata (so two plans with the
+same geometry share one compiled executable).
+
+Lifecycle contract (ISSUE 1): ``lower()`` is called once per weight
+update - the train step re-lowers every step (gradients flow through the
+lowering's straight-through quantizers back to the float master weights),
+while serve/eval lower once and replay the plan for every request.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+
+from repro.core.analog import AnalogConfig
+from repro.core.hw import BSS2
+
+# Epilogue tags (static). "none": raw accumulated ADC codes leave the
+# layer and are dequantized to float. "relu_shift": ADC-fused ReLU +
+# right-shift requantization to 5-bit codes (paper §II-A) - the next
+# layer consumes the codes directly, no float glue in between.
+EPILOGUE_NONE = "none"
+EPILOGUE_RELU_SHIFT = "relu_shift"
+
+
+def default_shift(n_chunks: int) -> int:
+    """Right-shift mapping the accumulated non-negative ADC range
+    ``[0, C * adc_max]`` onto the 5-bit activation range (paper §II-A:
+    "applying bitwise right-shifts")."""
+    full = n_chunks * BSS2.adc_max
+    shift = 0
+    while (full >> shift) > BSS2.a_max:
+        shift += 1
+    return shift
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """One lowered analog layer (frozen pytree).
+
+    Array fields (pytree leaves):
+      w_eff:        [K_pad, N] quantized codes x fixed-pattern gain,
+                    K padded to a chunk multiple at lower time.
+      w_scale:      [1, N] per-column weight LSB.
+      a_scale:      scalar static activation LSB (used when
+                    ``act_calib == "static"``; dynamic calib recomputes
+                    per call inside run()).
+      gain:         scalar (or [N]) calibrated analog gain.
+      chunk_offset: [C, N] fixed-pattern ADC offsets or None.
+      colsum:       [N] column sums of w_eff (offset-encoding correction
+                    term) or None.
+      bias:         [N] digital bias or None.
+
+    Static fields (hashable aux data):
+      k:            logical input width before chunk padding.
+      n:            output width.
+      chunk_rows:   rows per analog chunk.
+      signed_input: "none" | "split" | "offset" for THIS layer.
+      epilogue:     "none" | "relu_shift".
+      shift:        right-shift amount for the relu_shift epilogue.
+      flatten_out:  flatten trailing output dims into one feature axis
+                    before the next layer (the conv->fc1 im2col glue).
+    """
+
+    w_eff: jax.Array
+    w_scale: jax.Array
+    a_scale: jax.Array
+    gain: jax.Array
+    chunk_offset: Optional[jax.Array]
+    colsum: Optional[jax.Array]
+    bias: Optional[jax.Array]
+    k: int
+    n: int
+    chunk_rows: int
+    signed_input: str
+    epilogue: str = EPILOGUE_NONE
+    shift: int = 0
+    flatten_out: bool = False
+
+    @property
+    def n_chunks(self) -> int:
+        return self.w_eff.shape[0] // self.chunk_rows
+
+
+jax.tree_util.register_dataclass(
+    LayerPlan,
+    data_fields=[
+        "w_eff", "w_scale", "a_scale", "gain", "chunk_offset", "colsum",
+        "bias",
+    ],
+    meta_fields=[
+        "k", "n", "chunk_rows", "signed_input", "epilogue", "shift",
+        "flatten_out",
+    ],
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogPlan:
+    """A lowered stack of analog layers plus the execution config it was
+    lowered for.  ``cfg`` is static: plans lowered with different modes
+    (faithful/fast, pallas on/off, ...) compile to different programs."""
+
+    layers: Tuple[LayerPlan, ...]
+    cfg: AnalogConfig
+
+    def __len__(self) -> int:
+        return len(self.layers)
+
+
+jax.tree_util.register_dataclass(
+    AnalogPlan, data_fields=["layers"], meta_fields=["cfg"]
+)

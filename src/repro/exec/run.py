@@ -1,0 +1,235 @@
+"""Plan execution: ``run(plan, x)`` replays a pre-lowered analog program.
+
+Responsibilities left at run time (everything else was baked by
+:mod:`repro.exec.lower`):
+
+- dynamic activation calibration (per-call abs-max, the FPGA right-shift
+  choice) when ``cfg.act_calib == "dynamic"``,
+- signed-input encoding of the incoming activations (split/offset/none),
+- dispatch of the analog passes - ONE fused signed-split kernel per split
+  layer (``cfg.fused_split``, default) instead of the legacy two
+  ``analog_matmul`` calls, halving weight streaming and dispatches,
+- the inter-layer ADC epilogue: ReLU + right-shift requantization to
+  5-bit codes (paper §II-A).  In the differentiable path it runs as
+  elementwise STE ops; on the deterministic inference path with
+  ``cfg.use_pallas`` and ``cfg.fused_epilogue`` it is emitted INSIDE the
+  Pallas kernel, so a stacked plan (the ECG conv->fc1->fc2 chain) runs as
+  one jitted analog program with no float glue between layers,
+- temporal readout noise keys (mock-mode training).
+
+Dispatch accounting: every analog pass issued by the executor bumps
+:data:`ANALOG_DISPATCHES` at trace time - tests and benchmarks use
+:func:`reset_dispatch_count` / :func:`dispatch_count` to verify the fused
+path issues half the dispatches of the two-pass path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.analog import AnalogConfig, analog_matmul
+from repro.core.hw import BSS2
+from repro.exec.plan import (
+    EPILOGUE_NONE,
+    EPILOGUE_RELU_SHIFT,
+    AnalogPlan,
+    LayerPlan,
+)
+
+ANALOG_DISPATCHES = 0
+
+
+def reset_dispatch_count() -> None:
+    global ANALOG_DISPATCHES
+    ANALOG_DISPATCHES = 0
+
+
+def dispatch_count() -> int:
+    return ANALOG_DISPATCHES
+
+
+def _count(n: int = 1) -> None:
+    global ANALOG_DISPATCHES
+    ANALOG_DISPATCHES += n
+
+
+def _pad_codes(a: jax.Array, k_pad: int) -> jax.Array:
+    pad = k_pad - a.shape[-1]
+    if pad:
+        a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
+    return a
+
+
+def _epilogue_ste(y_int: jax.Array, shift: int) -> jax.Array:
+    """Elementwise ADC epilogue with straight-through gradients: ReLU at
+    the (offset-aligned) readout, then right-shift requantization onto the
+    5-bit activation range.  Value-identical to the in-kernel epilogue."""
+    return quant.requantize_5bit(jnp.maximum(y_int, 0.0), shift)
+
+
+def run_layer(
+    lp: LayerPlan,
+    x: jax.Array,
+    cfg: AnalogConfig,
+    *,
+    key: Optional[jax.Array] = None,
+    x_is_codes: bool = False,
+) -> jax.Array:
+    """Execute one lowered layer: x [..., K] -> y [..., N].
+
+    ``x_is_codes=True`` means ``x`` already holds unsigned 5-bit event
+    codes (LSB 1.0) - the hand-off format of a preceding ``relu_shift``
+    epilogue or the preprocessed ECG input - so quantization is skipped.
+    Output: float activations when ``lp.epilogue == "none"`` (dequantized,
+    bias applied), else 5-bit codes for the next stacked layer.
+    """
+    in_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    k_pad = lp.w_eff.shape[0]
+    rk = None if (cfg.deterministic or key is None) else key
+
+    if x_is_codes:
+        a_scale = jnp.asarray(1.0, jnp.float32)
+    elif cfg.act_calib == "dynamic":
+        # per-call abs-max calibration (the FPGA preprocessing / SIMD-CPU
+        # right-shift choice on hardware)
+        a_scale = quant.act_scale_from_max(
+            jax.lax.stop_gradient(jnp.abs(x)).max() + 1e-9
+        )
+    else:
+        a_scale = lp.a_scale
+    gain = lp.gain
+
+    signed = "none" if x_is_codes else lp.signed_input
+    if signed == "none":
+        a_code = x if x_is_codes else quant.quantize_act(x, a_scale)
+        a_code = _pad_codes(a_code, k_pad)
+        _count()
+        y_int = analog_matmul(a_code, lp.w_eff, gain, lp.chunk_offset, rk,
+                              cfg)
+    elif signed == "split":
+        a_pos = _pad_codes(quant.quantize_act(x, a_scale), k_pad)
+        a_neg = _pad_codes(quant.quantize_act(-x, a_scale), k_pad)
+        if cfg.fused_split and rk is None:
+            # ONE dispatch over shared weight tiles for both passes
+            from repro.kernels import ops as kernel_ops
+
+            batch_shape = a_pos.shape[:-1]
+            _count()
+            y2 = kernel_ops.analog_mvm_split(
+                a_pos.reshape(-1, k_pad), a_neg.reshape(-1, k_pad),
+                lp.w_eff, jnp.broadcast_to(gain, (lp.n,)), lp.chunk_offset,
+                lp.chunk_rows, cfg.mode != "analog_fast", cfg.use_pallas,
+                True,
+            )
+            y_int = y2.reshape(batch_shape + (lp.n,))
+        else:
+            # two-pass oracle (kept: noisy passes need independent keys)
+            k1, k2 = (None, None) if rk is None else tuple(
+                jax.random.split(rk)
+            )
+            _count(2)
+            y_int = analog_matmul(a_pos, lp.w_eff, gain, lp.chunk_offset,
+                                  k1, cfg) - \
+                analog_matmul(a_neg, lp.w_eff, gain, lp.chunk_offset, k2,
+                              cfg)
+    elif signed == "offset":
+        # single pass with offset-encoded activations and a digital
+        # correction  y = (a + h) @ W - h * colsum(W); gain derated for the
+        # common-mode ADC headroom (cf. Weis et al.).
+        half = (BSS2.a_max + 1) // 2
+        a_scale = a_scale * 2.0
+        rms = cfg.act_rms_codes
+        gain = gain * rms / jnp.sqrt(rms**2 + float(half) ** 2)
+        a_code = jnp.clip(
+            quant._round_ste(x / a_scale) + half, 0.0, float(BSS2.a_max)
+        )
+        a_code = _pad_codes(a_code, k_pad)
+        _count()
+        y_int = analog_matmul(a_code, lp.w_eff, gain, lp.chunk_offset, rk,
+                              cfg)
+        y_int = y_int - gain * half * lp.colsum
+    else:
+        raise ValueError(f"unknown signed_input {signed!r}")
+
+    if lp.epilogue == EPILOGUE_RELU_SHIFT:
+        # inter-layer ADC epilogue: output is 5-bit codes, not floats
+        return _epilogue_ste(y_int, lp.shift)
+    y = y_int * (a_scale * lp.w_scale.reshape(-1) / gain)
+    if lp.bias is not None:
+        y = y + lp.bias
+    return y.astype(in_dtype)
+
+
+def _run_layer_fused_infer(
+    lp: LayerPlan, codes: jax.Array, cfg: AnalogConfig
+) -> jax.Array:
+    """Deterministic code-domain layer with the epilogue fused into the
+    Pallas kernel (no custom VJP - inference only)."""
+    from repro.kernels import ops as kernel_ops
+
+    a = _pad_codes(codes.astype(jnp.float32), lp.w_eff.shape[0])
+    batch_shape = a.shape[:-1]
+    epi = (EPILOGUE_RELU_SHIFT, lp.shift) \
+        if lp.epilogue == EPILOGUE_RELU_SHIFT else None
+    _count()
+    y = kernel_ops.analog_mvm_infer(
+        a.reshape(-1, a.shape[-1]), None, lp.w_eff,
+        jnp.broadcast_to(lp.gain, (lp.n,)), lp.chunk_offset,
+        chunk_rows=lp.chunk_rows, faithful=cfg.mode != "analog_fast",
+        use_pallas=cfg.use_pallas, epilogue=epi,
+    )
+    return y.reshape(batch_shape + (lp.n,))
+
+
+def run(
+    plan: AnalogPlan,
+    x: jax.Array,
+    *,
+    key: Optional[jax.Array] = None,
+    x_is_codes: Optional[bool] = None,
+) -> jax.Array:
+    """Execute a whole lowered stack: one jitted analog program.
+
+    Layers whose predecessor emitted a ``relu_shift`` epilogue consume
+    5-bit codes directly (no dequant/requant glue); ``x_is_codes`` states
+    whether the initial input already is codes (default: yes iff the first
+    layer's own hand-off format is the code domain, i.e. the plan was
+    lowered with ADC epilogues).
+    """
+    cfg = plan.cfg
+    n = len(plan.layers)
+    ks = list(jax.random.split(key, n)) if key is not None else [None] * n
+    if x_is_codes is None:
+        # the first layer consumes codes iff IT hands off in the code
+        # domain (a plan lowered with ADC epilogues is a code-domain
+        # chain end to end); mixed plans starting with a float layer
+        # quantize their input like any other float activation.
+        x_is_codes = (
+            n > 0 and plan.layers[0].epilogue == EPILOGUE_RELU_SHIFT
+        )
+    is_codes = x_is_codes
+    h = x
+    for i, (lp, k) in enumerate(zip(plan.layers, ks)):
+        fuse_in_kernel = (
+            cfg.fused_epilogue and cfg.use_pallas and k is None
+            and is_codes and lp.signed_input == "none"
+            and lp.epilogue == EPILOGUE_RELU_SHIFT
+        )
+        if fuse_in_kernel:
+            h = _run_layer_fused_infer(lp, h, cfg)
+        else:
+            h = run_layer(lp, h, cfg, key=k, x_is_codes=is_codes)
+        if lp.epilogue == EPILOGUE_NONE and i < n - 1:
+            # float hand-off between layers: ReLU in the float domain,
+            # next layer re-quantizes (legacy inter-layer glue semantics)
+            h = jax.nn.relu(h)
+            is_codes = False
+        else:
+            is_codes = lp.epilogue == EPILOGUE_RELU_SHIFT
+        if lp.flatten_out:
+            h = h.reshape(h.shape[0], -1)
+    return h

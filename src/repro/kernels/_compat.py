@@ -1,0 +1,14 @@
+"""Version-compat shims for the Pallas TPU API.
+
+The installed JAX renamed ``pltpu.CompilerParams`` more than once across
+releases (``TPUCompilerParams`` in 0.4.x, ``CompilerParams`` again in newer
+trees).  Every kernel module imports :data:`CompilerParams` from here so the
+repo runs on whichever spelling the container ships.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None)
+if CompilerParams is None:
+    CompilerParams = getattr(pltpu, "TPUCompilerParams")

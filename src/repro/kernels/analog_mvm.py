@@ -32,10 +32,27 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.hw import BSS2
+from repro.kernels._compat import CompilerParams
+
+
+def _apply_epilogue(acc, epilogue):
+    """ADC epilogue (paper §II-A), applied to the digitally accumulated ADC
+    codes before they leave VMEM: ReLU at the readout followed by a bitwise
+    right-shift requantization onto the 5-bit input-activation range.  The
+    next stacked analog layer consumes the result directly as event codes,
+    so the inter-layer glue never touches HBM as floats."""
+    if epilogue is None:
+        return acc
+    kind, shift = epilogue
+    if kind != "relu_shift":
+        raise ValueError(f"unknown epilogue {epilogue!r}")
+    acc = jnp.maximum(acc, 0.0)
+    acc = jnp.floor(acc / float(1 << shift))
+    return jnp.clip(acc, 0.0, float(BSS2.a_max))
 
 
 def _kernel(a_ref, w_ref, gain_ref, off_ref, o_ref, acc_ref, *,
-            n_chunks: int, faithful: bool, compute_dtype):
+            n_chunks: int, faithful: bool, compute_dtype, epilogue=None):
     c = pl.program_id(2)
 
     @pl.when(c == 0)
@@ -58,14 +75,14 @@ def _kernel(a_ref, w_ref, gain_ref, off_ref, o_ref, acc_ref, *,
             lo = float(BSS2.adc_min) * n_chunks
             hi = float(BSS2.adc_max) * n_chunks
             acc = jnp.clip(jnp.round(acc), lo, hi)
-        o_ref[...] = acc
+        o_ref[...] = _apply_epilogue(acc, epilogue)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "chunk_rows", "faithful", "block_m", "block_n", "interpret",
-        "compute_dtype",
+        "compute_dtype", "epilogue",
     ),
 )
 def analog_mvm_pallas(
@@ -80,6 +97,7 @@ def analog_mvm_pallas(
     block_n: int = 512,
     interpret: bool = False,
     compute_dtype=jnp.float32,
+    epilogue=None,                        # None | ("relu_shift", shift)
 ) -> jax.Array:
     """``compute_dtype=jnp.bfloat16`` enables the full-rate MXU path on TPU;
     activation/weight codes are bf16-exact, only the fixed-pattern gain picks
@@ -111,7 +129,7 @@ def analog_mvm_pallas(
     out = pl.pallas_call(
         functools.partial(
             _kernel, n_chunks=n_chunks, faithful=faithful,
-            compute_dtype=compute_dtype,
+            compute_dtype=compute_dtype, epilogue=epilogue,
         ),
         grid=grid,
         in_specs=[
@@ -126,9 +144,135 @@ def analog_mvm_pallas(
             # fp32 accumulator lives in VMEM across the chunk loop
             pltpu.VMEM((block_m, block_n), jnp.float32)
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
     )(a_code.astype(jnp.float32), w_eff.astype(jnp.float32), gain, chunk_offset)
+    return out[:m, :n]
+
+
+# --------------------------------------------------------------------------
+# fused signed-split kernel
+# --------------------------------------------------------------------------
+def _split_kernel(ap_ref, an_ref, w_ref, gain_ref, off_ref, o_ref,
+                  accp_ref, accn_ref, *, n_chunks: int, faithful: bool,
+                  compute_dtype, epilogue=None):
+    """One grid pass over the shared weight tiles evaluates BOTH analog
+    passes of the signed-split encoding (paper §II-A: positive and negative
+    activation parts on the same synapse columns).  Each (bm, bn, c) step
+    streams the weight tile from HBM once and issues two MXU dots against
+    it - halving weight traffic and kernel dispatches vs. two independent
+    ``analog_mvm`` calls.  ADC saturation is applied to each pass
+    independently (each is a physical analog run), then the difference is
+    formed digitally on the last chunk step."""
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        accp_ref[...] = jnp.zeros_like(accp_ref)
+        accn_ref[...] = jnp.zeros_like(accn_ref)
+
+    w = w_ref[...].astype(compute_dtype)
+    gain = gain_ref[...]
+    off = off_ref[...]
+    vp = jnp.dot(ap_ref[...].astype(compute_dtype), w,
+                 preferred_element_type=jnp.float32) * gain + off
+    vn = jnp.dot(an_ref[...].astype(compute_dtype), w,
+                 preferred_element_type=jnp.float32) * gain + off
+    if faithful:
+        lo, hi = float(BSS2.adc_min), float(BSS2.adc_max)
+        vp = jnp.clip(jnp.round(vp), lo, hi)
+        vn = jnp.clip(jnp.round(vn), lo, hi)
+    accp_ref[...] += vp
+    accn_ref[...] += vn
+
+    @pl.when(c == n_chunks - 1)
+    def _done():
+        accp, accn = accp_ref[...], accn_ref[...]
+        if not faithful:
+            lo = float(BSS2.adc_min) * n_chunks
+            hi = float(BSS2.adc_max) * n_chunks
+            accp = jnp.clip(jnp.round(accp), lo, hi)
+            accn = jnp.clip(jnp.round(accn), lo, hi)
+        o_ref[...] = _apply_epilogue(accp - accn, epilogue)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "chunk_rows", "faithful", "block_m", "block_n", "interpret",
+        "compute_dtype", "epilogue",
+    ),
+)
+def analog_mvm_split_pallas(
+    a_pos: jax.Array,                     # [M, K] codes of max(x, 0)
+    a_neg: jax.Array,                     # [M, K] codes of max(-x, 0)
+    w_eff: jax.Array,                     # [K, N]
+    gain: jax.Array,                      # [N]
+    chunk_offset: Optional[jax.Array],    # [C, N] or None
+    *,
+    chunk_rows: int = BSS2.signed_rows,
+    faithful: bool = True,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+    compute_dtype=jnp.float32,
+    epilogue=None,                        # None | ("relu_shift", shift)
+) -> jax.Array:
+    """Fused signed-split analog VMM: ``mvm(a_pos) - mvm(a_neg)`` in one
+    kernel launch with single weight streaming.  Bit-exact (fp32) against
+    the two-pass oracle because per-pass arithmetic is unchanged - only the
+    tile schedule is shared (tested in tests/test_exec.py)."""
+    m, k = a_pos.shape
+    assert a_neg.shape == (m, k), (a_neg.shape, a_pos.shape)
+    k2, n = w_eff.shape
+    assert k == k2, (k, k2)
+    assert k % chunk_rows == 0, (k, chunk_rows)
+    n_chunks = k // chunk_rows
+
+    pm = (-m) % block_m
+    pn = (-n) % block_n
+    if pm:
+        a_pos = jnp.pad(a_pos, ((0, pm), (0, 0)))
+        a_neg = jnp.pad(a_neg, ((0, pm), (0, 0)))
+    if pn:
+        w_eff = jnp.pad(w_eff, ((0, 0), (0, pn)))
+    gain = jnp.broadcast_to(jnp.asarray(gain, jnp.float32), (n,))
+    if pn:
+        gain = jnp.pad(gain, (0, pn))
+    if chunk_offset is None:
+        chunk_offset = jnp.zeros((n_chunks, n + pn), jnp.float32)
+    elif pn:
+        chunk_offset = jnp.pad(chunk_offset, ((0, 0), (0, pn)))
+    mp, np_ = m + pm, n + pn
+
+    grid = (mp // block_m, np_ // block_n, n_chunks)
+    out = pl.pallas_call(
+        functools.partial(
+            _split_kernel, n_chunks=n_chunks, faithful=faithful,
+            compute_dtype=compute_dtype, epilogue=epilogue,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, chunk_rows), lambda i, j, c: (i, c)),
+            pl.BlockSpec((block_m, chunk_rows), lambda i, j, c: (i, c)),
+            pl.BlockSpec((chunk_rows, block_n), lambda i, j, c: (c, j)),
+            pl.BlockSpec((block_n,), lambda i, j, c: (j,)),
+            pl.BlockSpec((1, block_n), lambda i, j, c: (c, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, c: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(
+        a_pos.astype(jnp.float32), a_neg.astype(jnp.float32),
+        w_eff.astype(jnp.float32), gain, chunk_offset,
+    )
     return out[:m, :n]

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.core.hw import BSS2
 from repro.kernels import ref as ref_lib
-from repro.kernels.analog_mvm import analog_mvm_pallas
+from repro.kernels.analog_mvm import analog_mvm_pallas, analog_mvm_split_pallas
 from repro.kernels.preproc import maxmin_pool_pallas
 
 
@@ -63,18 +63,130 @@ def _analog_mvm_fwd(a_code, w_eff, gain, chunk_offset,
 def _analog_mvm_bwd(chunk_rows, faithful, use_pallas, res, g):
     # HIL gradient: treat the hardware op as y ~= gain * (a @ w) and
     # backpropagate through that linearization (STE across round/clip).
+    # The gain is frozen calibration state (paper §III-B: only the float
+    # master weights train; gain/offsets come from per-layer calibration,
+    # Weis et al.) - same semantics as core.analog._faithful_mm_bwd.
     a_code, w_eff, gain, chunk_offset = res
     g_scaled = g * gain                      # [M, N] * [N]
     da = g_scaled @ w_eff.T
     dw = a_code.T @ g_scaled
-    dgain = (g * (a_code @ w_eff)).sum(axis=0)
-    dgain = dgain if gain.ndim else dgain.sum()
+    dgain = jnp.zeros_like(gain)
     # fixed-pattern offsets are frozen hardware buffers, not trained
     d_off = None if chunk_offset is None else jnp.zeros_like(chunk_offset)
     return da, dw, dgain, d_off
 
 
 analog_mvm.defvjp(_analog_mvm_fwd, _analog_mvm_bwd)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8)
+)
+def analog_mvm_split(
+    a_pos: jax.Array,
+    a_neg: jax.Array,
+    w_eff: jax.Array,
+    gain: jax.Array,
+    chunk_offset: Optional[jax.Array],
+    chunk_rows: int = BSS2.signed_rows,
+    faithful: bool = True,
+    use_pallas: Optional[bool] = None,
+    fused: bool = True,
+) -> jax.Array:
+    """Signed-split analog VMM ``mvm(a_pos) - mvm(a_neg)`` as ONE dispatch.
+
+    ``fused=True`` (default) shares the weight tiles between the two
+    passes: on the Pallas path via the single-grid split kernel, on the
+    jnp path by stacking the two activation batches into one chunked
+    matmul.  Both are bit-exact (fp32) against the ``fused=False``
+    two-pass oracle because per-pass arithmetic is identical - only the
+    schedule changes.
+    """
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if not fused:
+        return ref_lib.analog_mvm_split_ref(
+            a_pos, a_neg, w_eff, gain, chunk_offset,
+            chunk_rows=chunk_rows, faithful=faithful,
+        )
+    if use:
+        return analog_mvm_split_pallas(
+            a_pos, a_neg, w_eff, gain, chunk_offset,
+            chunk_rows=chunk_rows, faithful=faithful,
+            interpret=not _on_tpu(),
+            compute_dtype=jnp.bfloat16 if _on_tpu() else jnp.float32,
+        )
+    # fused jnp path: one [2M, K] x [K, N] chunked matmul over shared
+    # weights (rows are independent, so per-row results equal the two-pass
+    # oracle bit-for-bit), then one digital subtraction.
+    m = a_pos.shape[0]
+    y2 = ref_lib.analog_mvm_ref(
+        jnp.concatenate([a_pos, a_neg], axis=0), w_eff, gain, chunk_offset,
+        chunk_rows=chunk_rows, faithful=faithful,
+    )
+    return y2[:m] - y2[m:]
+
+
+def _analog_mvm_split_fwd(a_pos, a_neg, w_eff, gain, chunk_offset,
+                          chunk_rows, faithful, use_pallas, fused):
+    y = analog_mvm_split(a_pos, a_neg, w_eff, gain, chunk_offset,
+                         chunk_rows, faithful, use_pallas, fused)
+    return y, (a_pos, a_neg, w_eff, gain, chunk_offset)
+
+
+def _analog_mvm_split_bwd(chunk_rows, faithful, use_pallas, fused, res, g):
+    # HIL linearization of the split pair: y ~= gain * ((a_pos - a_neg) @ w)
+    # with frozen gain/offset calibration state.
+    a_pos, a_neg, w_eff, gain, chunk_offset = res
+    g_scaled = g * gain
+    da = g_scaled @ w_eff.T
+    dw = (a_pos - a_neg).T @ g_scaled
+    dgain = jnp.zeros_like(gain)
+    d_off = None if chunk_offset is None else jnp.zeros_like(chunk_offset)
+    return da, -da, dw, dgain, d_off
+
+
+analog_mvm_split.defvjp(_analog_mvm_split_fwd, _analog_mvm_split_bwd)
+
+
+def analog_mvm_infer(
+    a_pos: jax.Array,
+    a_neg: Optional[jax.Array],
+    w_eff: jax.Array,
+    gain: jax.Array,
+    chunk_offset: Optional[jax.Array],
+    *,
+    chunk_rows: int = BSS2.signed_rows,
+    faithful: bool = True,
+    use_pallas: Optional[bool] = None,
+    epilogue=None,
+) -> jax.Array:
+    """Inference-only analog VMM with the ADC epilogue fused INTO the
+    kernel (plan executor hot path; no custom VJP - the differentiable
+    path applies the epilogue as elementwise STE ops instead, which is
+    bit-identical in value).  ``a_neg=None`` selects the unsigned
+    single-pass kernel, otherwise the fused signed-split kernel."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        kw = dict(chunk_rows=chunk_rows, faithful=faithful,
+                  interpret=not _on_tpu(),
+                  compute_dtype=jnp.bfloat16 if _on_tpu() else jnp.float32,
+                  epilogue=epilogue)
+        if a_neg is None:
+            return analog_mvm_pallas(a_pos, w_eff, gain, chunk_offset, **kw)
+        return analog_mvm_split_pallas(
+            a_pos, a_neg, w_eff, gain, chunk_offset, **kw
+        )
+    if a_neg is None:
+        y = ref_lib.analog_mvm_ref(a_pos, w_eff, gain, chunk_offset,
+                                   chunk_rows=chunk_rows, faithful=faithful)
+    else:
+        m = a_pos.shape[0]
+        y2 = ref_lib.analog_mvm_ref(
+            jnp.concatenate([a_pos, a_neg], axis=0), w_eff, gain,
+            chunk_offset, chunk_rows=chunk_rows, faithful=faithful,
+        )
+        y = y2[:m] - y2[m:]
+    return ref_lib.adc_epilogue_ref(y, epilogue)
 
 
 def maxmin_pool(x: jax.Array, window: int = 32,

@@ -13,7 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
 
 
 def _kernel(x_ref, o_ref, *, window: int):
@@ -48,7 +49,7 @@ def maxmin_pool_pallas(
                                lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((bb, tt_out), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")
         ),
         interpret=interpret,

@@ -38,6 +38,39 @@ def analog_mvm_ref(
     return jnp.clip(jnp.round(total), BSS2.adc_min * c, BSS2.adc_max * c)
 
 
+def analog_mvm_split_ref(
+    a_pos: jax.Array,
+    a_neg: jax.Array,
+    w_eff: jax.Array,
+    gain: jax.Array,
+    chunk_offset: Optional[jax.Array],
+    *,
+    chunk_rows: int = BSS2.signed_rows,
+    faithful: bool = True,
+) -> jax.Array:
+    """Two-pass signed-split oracle: positive and negative activation parts
+    as two independent analog runs on the same tiles, subtracted digitally.
+    This is the semantics the fused kernel must reproduce bit-exactly."""
+    yp = analog_mvm_ref(a_pos, w_eff, gain, chunk_offset,
+                        chunk_rows=chunk_rows, faithful=faithful)
+    yn = analog_mvm_ref(a_neg, w_eff, gain, chunk_offset,
+                        chunk_rows=chunk_rows, faithful=faithful)
+    return yp - yn
+
+
+def adc_epilogue_ref(y_int: jax.Array, epilogue) -> jax.Array:
+    """Forward-only ADC epilogue oracle (paper §II-A): ReLU at the readout +
+    right-shift requantization onto 5-bit codes.  Matches the in-kernel
+    epilogue of :mod:`repro.kernels.analog_mvm` bit-exactly."""
+    if epilogue is None:
+        return y_int
+    kind, shift = epilogue
+    assert kind == "relu_shift", epilogue
+    y = jnp.maximum(y_int, 0.0)
+    y = jnp.floor(y / float(1 << shift))
+    return jnp.clip(y, 0.0, float(BSS2.a_max))
+
+
 def maxmin_pool_ref(x: jax.Array, window: int = 32) -> jax.Array:
     """FPGA preprocessing pooling (paper Fig. 7): per non-overlapping window,
     max - min.  x: [..., T] with T % window == 0 -> [..., T // window]."""

@@ -21,7 +21,6 @@ import jax.numpy as jnp
 
 from repro.core.analog import AnalogConfig, analog_linear_init
 from repro.core.energy import LayerWork
-from repro.core.hw import BSS2
 from repro.core.noise import NoiseConfig
 from repro.models import layers as L
 
@@ -82,33 +81,69 @@ def _im2col(x, taps, stride):
     return cols.transpose(0, 2, 3, 1).reshape(b, npos, taps * c)
 
 
+def ecg_lower(params, acfg: AnalogConfig, cfg: ECGConfig = ECGConfig(), *,
+              epilogue: str = "none"):
+    """Lower the conv->fc1->fc2 chain to ONE AnalogPlan (exec subsystem).
+
+    ``epilogue`` selects the inter-layer hand-off:
+    - "none": float glue - dequantize, ReLU, re-quantize at the next layer
+      (the pre-plan module-by-module semantics, bit-compatible).
+    - "relu_shift": the hardware chain of paper §II-A - ReLU at the ADC +
+      right-shift requantization to 5-bit codes, so the whole stack runs
+      in the code domain as one jitted analog program with no float glue
+      (and, with ``acfg.use_pallas`` + ``acfg.fused_epilogue``, the
+      epilogue is emitted inside the Pallas kernel).
+    """
+    from repro.exec.lower import lower_stack
+
+    return lower_stack(
+        [params["conv"], params["fc1"], params["fc2"]],
+        acfg,
+        signed_inputs=["none", "none", "none"],
+        epilogues=[epilogue, epilogue, "none"],
+        flatten_outs=[True, False, False],
+    )
+
+
+def _pool_class_copies(out, cfg: ECGConfig, train: bool):
+    """§III-B: max pooling over the class-copy neurons during training
+    (robustness); average pooling at inference (noise averaging)."""
+    out = out.reshape(out.shape[0], cfg.classes, cfg.class_copies)
+    return out.max(axis=-1) if train else out.mean(axis=-1)
+
+
+def ecg_apply_plan(plan, x, cfg: ECGConfig = ECGConfig(), *,
+                   train: bool = False, key=None):
+    """Run a lowered ECG plan: x [B, C, T] codes -> logits [B, classes].
+    Lower once (per weight update), run many - the serve/eval hot path."""
+    from repro.exec.run import run as run_plan
+
+    cols = _im2col(x, cfg.conv_taps, cfg.conv_stride)
+    out = run_plan(plan, cols, key=key)
+    return _pool_class_copies(out, cfg, train)
+
+
 def ecg_apply(params, x, acfg: AnalogConfig, cfg: ECGConfig = ECGConfig(), *,
               train: bool = False, key=None):
     """x: [B, C, T] preprocessed 5-bit activations (integer-valued float).
 
-    Returns logits [B, classes].  ReLUs run as ADC-fused rectification +
-    5-bit requantization between analog layers (II-A); in digital mode they
-    are plain ReLUs.
+    Returns logits [B, classes].  Lowers the stack and delegates to the
+    plan executor (training re-lowers every call, which is exactly the HIL
+    contract; inference call sites should use :func:`ecg_lower` +
+    :func:`ecg_apply_plan` to pay the lowering once).
     """
-    ks = jax.random.split(key, 3) if key is not None else (None,) * 3
-    b = x.shape[0]
-    # input activations are unsigned 5-bit codes from the preprocessing
-    # chain; scale 1.0 (codes are the values)
-    cols = _im2col(x, cfg.conv_taps, cfg.conv_stride)
-    acfg_in = acfg.replace(signed_input="none")
-
-    h = L.linear_apply(params["conv"], cols, acfg_in, key=ks[0])
-    h = jax.nn.relu(h.reshape(b, cfg.conv_cols))
-
-    h = L.linear_apply(params["fc1"], h, acfg_in, key=ks[1])
-    h = jax.nn.relu(h)
-
-    out = L.linear_apply(params["fc2"], h, acfg_in, key=ks[2])
-    out = out.reshape(b, cfg.classes, cfg.class_copies)
-    if train:
-        # §III-B: max pooling during training for robustness
-        return out.max(axis=-1)
-    return out.mean(axis=-1)  # average pooling at inference (noise averaging)
+    if acfg.mode == "digital":
+        ks = jax.random.split(key, 3) if key is not None else (None,) * 3
+        b = x.shape[0]
+        cols = _im2col(x, cfg.conv_taps, cfg.conv_stride)
+        h = L.linear_apply(params["conv"], cols, acfg, key=ks[0])
+        h = jax.nn.relu(h.reshape(b, cfg.conv_cols))
+        h = L.linear_apply(params["fc1"], h, acfg, key=ks[1])
+        h = jax.nn.relu(h)
+        out = L.linear_apply(params["fc2"], h, acfg, key=ks[2])
+        return _pool_class_copies(out, cfg, train)
+    plan = ecg_lower(params, acfg, cfg)
+    return ecg_apply_plan(plan, x, cfg, train=train, key=key)
 
 
 def ecg_loss(params, x, labels, acfg, cfg: ECGConfig = ECGConfig(), key=None):

@@ -36,6 +36,14 @@ def linear_apply(params, x, acfg: AnalogConfig, *, key=None):
     return analog_linear_apply(params, x, acfg, key=key)
 
 
+def linear_lower(params, acfg: AnalogConfig, **kw):
+    """Lower one linear layer to a reusable single-layer AnalogPlan
+    (compile-once/run-many; see repro.exec)."""
+    from repro.exec.lower import lower as lower_plan
+
+    return lower_plan(params, acfg, **kw)
+
+
 def linear_specs(in_name: Optional[str], out_name: Optional[str],
                  *, bias=False, noise: NoiseConfig = NoiseConfig()):
     specs = {

@@ -1,1 +1,8 @@
-"""Serving substrates: prefill/decode steps and the batched engine."""
+"""Serving substrates: prefill/decode steps and the batched engine.
+
+Engines sit on top of the exec layer (repro.exec): the unsharded engine
+pre-lowers the analog layers of its frozen params once and the jitted
+steps replay the resulting plans instead of re-quantizing per forward.
+"""
+from repro.serve.engine import Request, ServeEngine  # noqa: F401
+from repro.serve.serve_step import make_serve_steps  # noqa: F401

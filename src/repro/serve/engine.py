@@ -14,8 +14,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, RunConfig
+from repro.distributed import sharding as shd
 from repro.models import transformer as T
 from repro.serve.serve_step import make_serve_steps
+
+
+def shd_mesh_absent() -> bool:
+    """Pre-lowered trees carry extra ``_plan`` entries that the logical-axis
+    sharding specs don't know; restrict pre-lowering to the unsharded
+    engine (the mesh path keeps per-step lowering, CSE'd inside jit)."""
+    return shd.get_mesh() is None
 
 
 @dataclasses.dataclass
@@ -31,8 +39,19 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, run: RunConfig, params,
                  batch_size: int = 8, max_len: int = 512,
-                 greedy: bool = True, seed: int = 0):
+                 greedy: bool = True, seed: int = 0,
+                 prelower: bool = True):
         self.cfg, self.run = cfg, run
+        # Serving is inference against frozen weights: pre-lower every
+        # analog layer ONCE (quantized effective weights, chunk padding,
+        # offsets - repro.exec) so the jitted prefill/decode steps replay
+        # the plan instead of re-deriving it per forward.  Weight updates
+        # (not a serve concern) would require re-lowering.
+        if prelower and run.analog.mode != "digital" \
+                and shd_mesh_absent():
+            from repro.exec.lower import prelower_tree
+
+            params = prelower_tree(params, run.analog)
         self.params = params
         self.batch_size = batch_size
         self.max_len = max_len

@@ -1,10 +1,14 @@
 """Data-substrate tests: ECG synthesis statistics, bit-exact preprocessing
 chain, pipeline determinism/shardability (hypothesis property tests)."""
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property suites need hypothesis (requirements-dev)"
+)
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.data.ecg_synth import ECGDatasetConfig, make_dataset, synth_record
 from repro.data.lm_data import DataConfig, SyntheticLM

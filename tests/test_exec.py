@@ -1,0 +1,364 @@
+"""Tests for the exec subsystem (ISSUE 1): plan lowering/reuse, the fused
+signed-split kernel vs the two-pass oracle, the ADC epilogue fusion, and
+HIL gradient parity between the Pallas-dispatch and pure-jnp paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.exec as E
+from repro.core.analog import (
+    AnalogConfig,
+    analog_linear_apply,
+    analog_linear_init,
+)
+from repro.core.noise import NOISELESS, NoiseConfig
+from repro.exec.run import dispatch_count, reset_dispatch_count
+from repro.kernels import ops
+from repro.kernels import ref as R
+from repro.kernels.analog_mvm import analog_mvm_split_pallas
+from repro.models import ecg as ECG
+
+KEY = jax.random.PRNGKey(7)
+SPLIT_CFG = AnalogConfig(noise=NOISELESS, signed_input="split")
+
+
+def _mk(in_dim=256, out_dim=64, noise=NOISELESS, seed=0):
+    return analog_linear_init(
+        jax.random.PRNGKey(seed), in_dim, out_dim, noise=noise
+    )
+
+
+def _split_inputs(m, k, n, seed=0):
+    ka, kw, kg, ko = jax.random.split(jax.random.PRNGKey(seed), 4)
+    a_pos = jnp.round(jax.random.uniform(ka, (m, k)) * 31)
+    a_neg = jnp.round(jax.random.uniform(kg, (m, k)) * 31)
+    w = jnp.round(jax.random.uniform(kw, (k, n), minval=-1, maxval=1) * 63)
+    w = w * (1 + 0.02 * jax.random.normal(kg, (k, n)))
+    gain = jnp.full((n,), 0.02, jnp.float32)
+    off = jax.random.normal(ko, (k // 128, n), jnp.float32)
+    return a_pos, a_neg, w, gain, off
+
+
+class TestFusedSplitKernel:
+    @pytest.mark.parametrize("m,k,n", [(8, 128, 64), (100, 384, 129),
+                                       (256, 256, 512)])
+    @pytest.mark.parametrize("faithful", [True, False])
+    def test_bit_exact_vs_two_pass_kernel(self, m, k, n, faithful):
+        """Fused single-grid kernel (fp32 interpret mode) == the existing
+        two-analog-pass path (two independent kernel launches), bit for
+        bit: sharing the tile schedule must not change the arithmetic."""
+        from repro.kernels.analog_mvm import analog_mvm_pallas
+
+        a_pos, a_neg, w, gain, off = _split_inputs(m, k, n)
+        got = analog_mvm_split_pallas(
+            a_pos, a_neg, w, gain, off, faithful=faithful, interpret=True,
+        )
+        want = analog_mvm_pallas(
+            a_pos, w, gain, off, faithful=faithful, interpret=True,
+        ) - analog_mvm_pallas(
+            a_neg, w, gain, off, faithful=faithful, interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("faithful", [True, False])
+    def test_close_to_two_pass_oracle(self, faithful):
+        """Against the pure-jnp oracle the fused kernel is exact up to the
+        fp32 contraction-order sensitivity of the noised float weights
+        (<= 1 ADC code per chunk at round boundaries); with integer
+        weights it is bit-exact (covered by the unsigned kernel suite)."""
+        a_pos, a_neg, w, gain, off = _split_inputs(64, 256, 128)
+        got = analog_mvm_split_pallas(
+            a_pos, a_neg, w, gain, off, faithful=faithful, interpret=True,
+        )
+        want = R.analog_mvm_split_ref(a_pos, a_neg, w, gain, off,
+                                      faithful=faithful)
+        assert float(jnp.abs(got - want).max()) <= 2.0 * (256 // 128)
+
+    def test_fused_jnp_path_bit_exact(self):
+        """The stacked-batch jnp fusion equals the two-pass oracle too."""
+        a_pos, a_neg, w, gain, off = _split_inputs(16, 256, 96)
+        got = ops.analog_mvm_split(a_pos, a_neg, w, gain, off,
+                                   128, True, False, True)
+        want = ops.analog_mvm_split(a_pos, a_neg, w, gain, off,
+                                    128, True, False, False)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_module_level_fused_matches_two_pass(self):
+        p = _mk()
+        x = jax.random.normal(KEY, (8, 256)) * 0.2
+        y_fused = analog_linear_apply(p, x, SPLIT_CFG)
+        y_two = analog_linear_apply(p, x, SPLIT_CFG.replace(
+            fused_split=False))
+        np.testing.assert_array_equal(np.asarray(y_fused),
+                                      np.asarray(y_two))
+
+    def test_epilogue_in_kernel_matches_reference(self):
+        a_pos, a_neg, w, gain, off = _split_inputs(8, 256, 64)
+        epi = ("relu_shift", 3)
+        got = analog_mvm_split_pallas(a_pos, a_neg, w, gain, off,
+                                      interpret=True, epilogue=epi)
+        want = R.adc_epilogue_ref(
+            R.analog_mvm_split_ref(a_pos, a_neg, w, gain, off), epi
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert float(got.min()) >= 0.0 and float(got.max()) <= 31.0
+
+
+class TestAnalogPlan:
+    def test_lower_once_run_twice_identical(self):
+        p = _mk()
+        x = jax.random.normal(KEY, (8, 256)) * 0.2
+        plan = E.lower(p, SPLIT_CFG)
+        y1 = E.run(plan, x)
+        y2 = E.run(plan, x)
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+        # and equals the legacy per-call wrapper
+        y3 = analog_linear_apply(p, x, SPLIT_CFG)
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y3))
+
+    def test_plan_is_jit_reusable_pytree(self):
+        """A plan flows through jit as a pytree: two runs of the jitted
+        executor reuse ONE compiled executable (no retracing)."""
+        p = _mk()
+        x = jax.random.normal(KEY, (8, 256)) * 0.2
+        plan = E.lower(p, SPLIT_CFG)
+        traces = []
+
+        @jax.jit
+        def f(plan, x):
+            traces.append(1)
+            return E.run(plan, x)
+
+        y1 = f(plan, x)
+        y2 = f(plan, x)
+        assert len(traces) == 1
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+    def test_no_weight_requantization_in_run_trace(self):
+        """Lowering bakes weight quantization: the executor's jaxpr must
+        not divide by the weight scale (the quantize_weight signature op),
+        while the legacy per-call wrapper's jaxpr does."""
+        p = _mk()
+        x = jax.random.normal(KEY, (4, 256)) * 0.2
+        plan = E.lower(p, SPLIT_CFG)
+
+        def sub_jaxprs(params):
+            for v in params.values():
+                for item in (v if isinstance(v, (list, tuple)) else [v]):
+                    if hasattr(item, "jaxpr"):       # ClosedJaxpr
+                        yield item.jaxpr
+                    elif hasattr(item, "eqns"):      # raw Jaxpr
+                        yield item
+
+        def count_wscale_divs(jaxpr):
+            # quantize_weight divides the [K, N] master weights by the
+            # [1, N] scale; count div eqns with that operand signature
+            # (recursing into sub-jaxprs: scan/custom_vjp bodies).
+            n = 0
+            for eqn in jaxpr.eqns:
+                if eqn.primitive.name == "div":
+                    shapes = [getattr(v.aval, "shape", ()) for v in
+                              eqn.invars]
+                    if shapes and shapes[0] == (256, 64):
+                        n += 1
+                for sub in sub_jaxprs(eqn.params):
+                    n += count_wscale_divs(sub)
+            return n
+
+        run_jaxpr = jax.make_jaxpr(lambda pl_, x_: E.run(pl_, x_))(plan, x)
+        apply_jaxpr = jax.make_jaxpr(
+            lambda p_, x_: analog_linear_apply(p_, x_, SPLIT_CFG)
+        )(p, x)
+        assert count_wscale_divs(run_jaxpr.jaxpr) == 0
+        assert count_wscale_divs(apply_jaxpr.jaxpr) > 0
+
+    def test_mixed_epilogue_plan_keeps_float_input(self):
+        """A plan whose FIRST layer hands off floats must quantize its
+        float input even when a later layer uses a code-domain epilogue."""
+        from repro.exec.lower import lower_stack
+
+        ps = [_mk(seed=i, out_dim=256) for i in range(2)] + [_mk(seed=2)]
+        plan = lower_stack(ps, SPLIT_CFG,
+                           epilogues=["none", "relu_shift", "none"])
+        x = jax.random.normal(KEY, (4, 256)) * 0.2
+        y_auto = E.run(plan, x)
+        y_float = E.run(plan, x, x_is_codes=False)
+        np.testing.assert_array_equal(np.asarray(y_auto),
+                                      np.asarray(y_float))
+
+    def test_bias_rejected_in_code_domain_handoff(self):
+        p = analog_linear_init(jax.random.PRNGKey(0), 128, 128, bias=True,
+                               noise=NOISELESS)
+        from repro.exec.lower import lower_layer
+
+        with pytest.raises(ValueError, match="bias"):
+            lower_layer(p, SPLIT_CFG, epilogue="relu_shift")
+
+    def test_prelowered_cfg_mismatch_falls_back(self):
+        """A baked plan with different static attrs than the call-site cfg
+        must not be used (per-call lowering takes over)."""
+        from repro.exec.lower import prelower_tree
+
+        p = _mk()
+        x = jnp.abs(jax.random.normal(KEY, (4, 256))) * 0.2
+        lowered = prelower_tree(p, SPLIT_CFG)          # bakes "split"
+        cfg_none = SPLIT_CFG.replace(signed_input="none")
+        y1 = analog_linear_apply(lowered, x, cfg_none)
+        y2 = analog_linear_apply(p, x, cfg_none)
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+    def test_weight_tied_layers_get_float_glue(self):
+        """The same LayerPlan object appearing twice must still get the
+        inter-layer ReLU glue at every non-final position."""
+        from repro.exec.lower import lower_layer, lower_stack
+        from repro.exec.plan import AnalogPlan
+
+        p = _mk(in_dim=256, out_dim=256)
+        lp = lower_layer(p, SPLIT_CFG)
+        tied = AnalogPlan(layers=(lp, lp), cfg=SPLIT_CFG)
+        untied = lower_stack([p, p], SPLIT_CFG)
+        x = jax.random.normal(KEY, (4, 256)) * 0.2
+        np.testing.assert_array_equal(np.asarray(E.run(tied, x)),
+                                      np.asarray(E.run(untied, x)))
+
+    def test_prelowered_params_shortcut(self):
+        from repro.exec.lower import prelower_tree
+
+        p = _mk()
+        x = jax.random.normal(KEY, (4, 256)) * 0.2
+        tree = {"layer": p, "other": {"scale": jnp.ones((4,))}}
+        lowered = prelower_tree(tree, SPLIT_CFG)
+        assert "_plan" in lowered["layer"]
+        assert "_plan" not in lowered["other"]
+        y1 = analog_linear_apply(lowered["layer"], x, SPLIT_CFG)
+        y2 = analog_linear_apply(p, x, SPLIT_CFG)
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+class TestDispatchCounts:
+    def test_fused_split_halves_dispatches(self):
+        p = _mk()
+        x = jax.random.normal(KEY, (8, 256)) * 0.2
+        reset_dispatch_count()
+        analog_linear_apply(p, x, SPLIT_CFG)
+        fused = dispatch_count()
+        reset_dispatch_count()
+        analog_linear_apply(p, x, SPLIT_CFG.replace(fused_split=False))
+        two_pass = dispatch_count()
+        assert (fused, two_pass) == (1, 2)
+
+    def test_ecg_split_stack_halves_dispatches(self):
+        """ECG-shaped 3-layer stack in split encoding: plan executor = 3
+        fused dispatches, per-call two-pass path = 6."""
+        cfg = ECG.ECGConfig(noise=NOISELESS)
+        params = ECG.ecg_init(jax.random.PRNGKey(0), cfg)
+        x = jnp.round(
+            jax.random.uniform(jax.random.PRNGKey(1), (2, 2, 126)) * 31
+        )
+        stack = [params["conv"], params["fc1"], params["fc2"]]
+        from repro.exec.lower import lower_stack
+
+        plan = lower_stack(stack, SPLIT_CFG)
+        cols = ECG._im2col(x, cfg.conv_taps, cfg.conv_stride)
+        reset_dispatch_count()
+        E.run(plan, cols)
+        fused = dispatch_count()
+        plan2 = lower_stack(stack, SPLIT_CFG.replace(fused_split=False))
+        reset_dispatch_count()
+        E.run(plan2, cols)
+        two_pass = dispatch_count()
+        assert fused * 2 == two_pass
+        assert fused == 3
+
+
+class TestECGPlanExecutor:
+    def test_plan_matches_module_path(self):
+        cfg = ECG.ECGConfig(noise=NoiseConfig())
+        params = ECG.ecg_init(jax.random.PRNGKey(0), cfg)
+        x = jnp.round(
+            jax.random.uniform(jax.random.PRNGKey(1), (4, 2, 126)) * 31
+        )
+        acfg = AnalogConfig()
+        plan = ECG.ecg_lower(params, acfg, cfg)
+        y_plan = ECG.ecg_apply_plan(plan, x, cfg)
+        y_mod = ECG.ecg_apply(params, x, acfg, cfg)
+        np.testing.assert_array_equal(np.asarray(y_plan),
+                                      np.asarray(y_mod))
+
+    def test_adc_chain_runs_in_code_domain(self):
+        """relu_shift lowering: inter-layer activations are 5-bit codes;
+        in-kernel fused epilogue == elementwise STE epilogue bit-exact."""
+        cfg = ECG.ECGConfig(noise=NoiseConfig())
+        params = ECG.ecg_init(jax.random.PRNGKey(0), cfg)
+        x = jnp.round(
+            jax.random.uniform(jax.random.PRNGKey(1), (4, 2, 126)) * 31
+        )
+        acfg = AnalogConfig()
+        plan_ste = ECG.ecg_lower(params, acfg.replace(use_pallas=True),
+                                 cfg, epilogue="relu_shift")
+        plan_fused = ECG.ecg_lower(
+            params, acfg.replace(use_pallas=True, fused_epilogue=True),
+            cfg, epilogue="relu_shift",
+        )
+        y_ste = ECG.ecg_apply_plan(plan_ste, x, cfg)
+        y_fused = ECG.ecg_apply_plan(plan_fused, x, cfg)
+        np.testing.assert_array_equal(np.asarray(y_ste),
+                                      np.asarray(y_fused))
+        # the classifier still separates something (not all-equal logits)
+        assert float(jnp.abs(y_ste).max()) > 0.0
+
+
+class TestHILGradientParity:
+    def test_pallas_vs_jnp_gradients(self):
+        """Satellite: the Pallas-dispatch custom VJP and the pure-jnp
+        faithful path must produce the SAME HIL gradients (frozen gain).
+        NOISELESS params keep the integer arithmetic exact so the parity
+        is not blurred by fp32 rounding-order differences."""
+        p = _mk()
+        x = jax.random.normal(KEY, (16, 256)) * 0.3
+        cfg = AnalogConfig(signed_input="none")
+
+        def loss(params, use_pallas):
+            y = analog_linear_apply(
+                params, jnp.abs(x), cfg.replace(use_pallas=use_pallas)
+            )
+            return (y ** 2).mean()
+
+        g_jnp = jax.grad(loss)(p, False)
+        g_pl = jax.grad(loss)(p, True)
+        np.testing.assert_allclose(
+            np.asarray(g_jnp["w"]), np.asarray(g_pl["w"]),
+            rtol=1e-5, atol=1e-7,
+        )
+        # gain is frozen calibration state on BOTH paths (paper §III-B)
+        np.testing.assert_array_equal(np.asarray(g_jnp["gain"]),
+                                      np.asarray(g_pl["gain"]))
+
+    def test_gain_frozen_in_kernel_bwd(self):
+        a = jnp.round(jax.random.uniform(KEY, (8, 256)) * 31)
+        w = jnp.round(jax.random.normal(KEY, (256, 32)) * 10)
+        gain = jnp.full((32,), 0.02)
+
+        def f(gain_):
+            return ops.analog_mvm(a, w, gain_, None, 128, True, False).sum()
+
+        g = jax.grad(f)(gain)
+        np.testing.assert_array_equal(np.asarray(g), np.zeros_like(g))
+
+    def test_split_fused_gradient_matches_two_pass(self):
+        p = _mk()
+        x = jax.random.normal(KEY, (16, 256)) * 0.3
+
+        def loss(params, fused):
+            y = analog_linear_apply(
+                params, x, SPLIT_CFG.replace(fused_split=fused)
+            )
+            return (y ** 2).mean()
+
+        g_fused = jax.grad(loss)(p, True)
+        g_two = jax.grad(loss)(p, False)
+        np.testing.assert_allclose(
+            np.asarray(g_fused["w"]), np.asarray(g_two["w"]),
+            rtol=1e-5, atol=1e-7,
+        )

@@ -1,12 +1,16 @@
 """Hypothesis property tests on system invariants of the analog substrate
 (beyond the example-based tests): scale equivariance, padding invariance,
 saturation monotonicity, noise statistics, and partitioner arithmetic."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property suites need hypothesis (requirements-dev)"
+)
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import quant
 from repro.core.analog import AnalogConfig, analog_matmul

@@ -1,12 +1,15 @@
 """Unit + property tests for the BSS-2 quantizers (paper Fig. 4 datapath)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis.extra import numpy as hnp
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property suites need hypothesis (requirements-dev)"
+)
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+from hypothesis.extra import numpy as hnp  # noqa: E402
 
 from repro.core import quant
 from repro.core.hw import BSS2
