@@ -21,11 +21,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core.analog import AnalogConfig
 from repro.core.noise import NoiseConfig
 from repro.data.ecg_synth import ECGDatasetConfig, make_dataset
 from repro.data.preprocess import preprocess_batch
-from repro.models.ecg import ECGConfig, ecg_apply, ecg_init, ecg_loss
+from repro.models.ecg import (
+    ECGConfig,
+    ecg_apply_plan,
+    ecg_init,
+    ecg_loss,
+    ecg_module_spec,
+)
 from repro.train import optimizer as O
 
 
@@ -83,10 +90,25 @@ def run(n_train=1500, n_test=500, epochs=30, batch=64, lr=2e-3, seed=0,
         params, opt, om = O.adamw_update(params, g, opt, ocfg)
         return params, opt, loss, aux["acc"]
 
-    @jax.jit
-    def infer(params, xb):
-        # standalone inference mode: deterministic, average pooling
-        return ecg_apply(params, xb, acfg.replace(deterministic=True), mcfg)
+    # standalone inference (deterministic, average pooling) goes through
+    # the api front door: compile once per weight update, replay the plan
+    # for every eval batch (the serve contract; training above re-lowers
+    # per step inside the grad, the HIL contract)
+    spec = ecg_module_spec(mcfg)
+    infer_acfg = acfg.replace(deterministic=True)
+    if mode == "digital":
+        _infer = jax.jit(
+            lambda params, xb: api.compile(spec, params, infer_acfg).apply(xb)
+        )
+
+        def eval_batches(params, *xbs):
+            return [_infer(params, xb) for xb in xbs]
+    else:
+        _replay = jax.jit(lambda plan, xb: ecg_apply_plan(plan, xb, mcfg))
+
+        def eval_batches(params, *xbs):
+            plan = api.compile(spec, params, infer_acfg).lower()
+            return [_replay(plan, xb) for xb in xbs]
 
     key = jax.random.PRNGKey(seed + 1)
     n_batches = len(xtr) // batch
@@ -102,8 +124,9 @@ def run(n_train=1500, n_test=500, epochs=30, batch=64, lr=2e-3, seed=0,
             params, opt, loss, acc = step(params, opt, xtr[idx], ytr[idx],
                                           kn)
             params = _clip_masters(params)
-        _, _, val_acc = detection_metrics(infer(params, xval), yval)
-        det, fpr, acc = detection_metrics(infer(params, xte), yte)
+        val_logits, te_logits = eval_batches(params, xval, xte)
+        _, _, val_acc = detection_metrics(val_logits, yval)
+        det, fpr, acc = detection_metrics(te_logits, yte)
         history.append((float(loss), det, fpr, acc))
         if val_acc > best[0]:
             best = (val_acc, params)
@@ -119,7 +142,8 @@ def run(n_train=1500, n_test=500, epochs=30, batch=64, lr=2e-3, seed=0,
                 print(f"early stop at epoch {ep + 1}")
             break
     params = best[1]
-    det, fpr, acc = detection_metrics(infer(params, xte), yte)
+    (te_logits,) = eval_batches(params, xte)
+    det, fpr, acc = detection_metrics(te_logits, yte)
     return {
         "mode": mode,
         "detection_rate": det,

@@ -49,9 +49,10 @@ def kernels_micro() -> None:
 
 
 def smoke() -> None:
-    """CI subset: kernel sanity + the exec-layer speedup, dumped to
-    BENCH_smoke.json so the plan-cached vs per-call numbers land in the
-    benchmark artifacts."""
+    """CI subset: kernel sanity + the exec-layer and transformer-block
+    plan speedups, dumped to BENCH_smoke.json.  Exits non-zero (failing
+    the bench-smoke CI job) if plan replay regresses below 1.0x vs the
+    per-call path."""
     from benchmarks import throughput
 
     t0 = time.time()
@@ -61,11 +62,23 @@ def smoke() -> None:
     print(f"{pc['shape']}: dispatches={pc['dispatches']} "
           f"plan {pc['plan_speedup']:.2f}x, "
           f"plan+fused {pc['fused_speedup']:.2f}x")
-    out = {"plan_vs_percall": pc, "wall_s": time.time() - t0}
+    tb = throughput.transformer_block_plan_throughput(iters=5)
+    print("\n== transformer block: api plan (fused QKV) vs per-call ==")
+    print(f"{tb['shape']}: dispatches={tb['dispatches']} "
+          f"plan {tb['plan_speedup']:.2f}x, "
+          f"lower() once = {tb['lower_us']:.0f}us")
+    out = {"plan_vs_percall": pc, "transformer_block": tb,
+           "wall_s": time.time() - t0}
     with open("BENCH_smoke.json", "w") as f:
         json.dump(out, f, indent=2, default=float)
     print(f"\nsmoke benchmarks done in {out['wall_s']:.0f}s "
           f"-> BENCH_smoke.json")
+    floors = {"plan_vs_percall": pc["plan_speedup"],
+              "transformer_block": tb["plan_speedup"]}
+    bad = {k: v for k, v in floors.items() if v < 1.0}
+    if bad:
+        print(f"FAIL: plan replay regressed below 1.0x vs per-call: {bad}")
+        sys.exit(1)
 
 
 def main() -> None:

@@ -161,6 +161,72 @@ def plan_vs_percall_throughput(iters: int = 10) -> dict:
     return out
 
 
+def transformer_block_plan_throughput(iters: int = 10) -> dict:
+    """Transformer-block plan-vs-percall (ISSUE 2): one attention + MLP
+    block in analog mode, executed three ways:
+
+    - ``percall``: raw params - every forward re-derives w_code / w_eff /
+      offsets for all 7 projections (QKV/O + up/gate/down),
+    - ``plan``: the api front door - ``api.lower_tree`` bakes the block
+      once, attention QKV fused into ONE dispatch group (5 dispatches
+      instead of 7),
+
+    plus the one-time ``lower()`` latency the serve engine pays at
+    compile time.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro import api
+    from repro.core.analog import AnalogConfig
+    from repro.exec.run import dispatch_count, reset_dispatch_count
+    from repro.models import attention as A
+    from repro.models import layers as L
+
+    d, heads, kv, hd, d_ff = 256, 4, 4, 64, 512
+    b, s = 8, 32
+    key = jax.random.PRNGKey(0)
+    params = {
+        "attn": A.attention_init(key, d, heads, kv, hd),
+        "mlp": L.mlp_init(jax.random.PRNGKey(1), d, d_ff),
+    }
+    x = jax.random.normal(jax.random.PRNGKey(2), (b, s, d)) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    acfg = AnalogConfig()
+
+    def block(p, x):
+        h, _ = A.attention_apply(
+            p["attn"], x, positions=pos, acfg=acfg, n_heads=heads,
+            n_kv_heads=kv, head_dim=hd, rope_theta=1e4,
+        )
+        return L.mlp_apply(p["mlp"], x + h, acfg)
+
+    t0 = time.perf_counter()
+    lowered = api.lower_tree(params, acfg)
+    jax.block_until_ready(jax.tree.leaves(lowered))
+    lower_us = (time.perf_counter() - t0) * 1e6
+
+    fns = {"percall": (jax.jit(block), params),
+           "plan": (jax.jit(block), lowered)}
+    out = {"shape": f"attn+mlp d={d} ff={d_ff} x[{b}x{s}x{d}]",
+           "lower_us": lower_us, "dispatches": {}}
+    for name, (f, p) in fns.items():
+        reset_dispatch_count()
+        block(p, x)
+        out["dispatches"][name] = dispatch_count()
+        for _ in range(3):
+            f(p, x).block_until_ready()
+        best = float("inf")
+        for _ in range(4):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                f(p, x).block_until_ready()
+            best = min(best, (time.perf_counter() - t0) / iters)
+        out[f"{name}_us"] = best * 1e6
+    out["plan_speedup"] = out["percall_us"] / out["plan_us"]
+    return out
+
+
 def emulation_throughput() -> dict:
     """Host-side emulation speed of the faithful analog matmul (ref path)."""
     import jax

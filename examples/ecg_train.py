@@ -1,12 +1,14 @@
 """End-to-end driver: the paper's showcase, start to finish (paper §III-IV).
 
-    PYTHONPATH=src python examples/ecg_train.py [--epochs 40] [--fast]
+    PYTHONPATH=src:. python examples/ecg_train.py [--epochs 40] [--fast]
 
 Pipeline (all stages implemented, none stubbed):
   synthetic 2-channel ECG records (the competition set is private)
     -> FPGA preprocessing chain (derivative, max-min pool 32, 5-bit quant)
-    -> Fig.-6 CDNN on the analog backend (conv + 2 FC on 128x512 tiles)
-    -> hardware-in-the-loop training (noisy analog fwd, float bwd)
+    -> Fig.-6 CDNN declared once (`ecg_module_spec`) and compiled through
+       the `repro.api` front door onto the analog backend
+    -> hardware-in-the-loop training (noisy analog fwd, float bwd;
+       training re-compiles per step, eval replays one CompiledModel)
     -> standalone-inference evaluation (deterministic, avg-pool readout)
     -> Table-1 energy/latency accounting for the trained model
 
@@ -20,15 +22,22 @@ from repro.core.energy import LayerWork, SystemModel, battery_lifetime_years
 from repro.models.ecg import ECGConfig
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--epochs", type=int, default=40)
     ap.add_argument("--fast", action="store_true")
-    a = ap.parse_args()
+    ap.add_argument("--n-train", type=int, default=0,
+                    help="override train-set size (0 = preset)")
+    ap.add_argument("--n-test", type=int, default=0)
+    a = ap.parse_args(argv)
 
     kw = dict(n_train=600, n_test=250, epochs=10) if a.fast else dict(
         epochs=a.epochs
     )
+    if a.n_train:
+        kw["n_train"] = a.n_train
+    if a.n_test:
+        kw["n_test"] = a.n_test
     print("=== HIL training on the analog backend (mock-mode noise) ===")
     r = run(mode="analog_faithful", **kw)
     print(f"\nanalog HIL: detection {r['detection_rate']*100:.1f}% @ "

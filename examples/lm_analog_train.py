@@ -10,6 +10,11 @@ pod-scale job; see launch/dryrun.py for the 256/512-chip lowering).  Trains
 the same model twice - digital and analog_faithful - and compares loss
 curves: the analog run converges despite W6A5 quantization, saturating
 8-bit ADCs and fixed-pattern noise, which is the paper's §III-B result.
+
+The train step goes through the `repro.api` front door: every step
+re-compiles the declared analog layers from the float masters inside the
+gradient (`api.compile` in train_step.py), which IS the hardware-in-the-
+loop scheme - the STE quantizers in the lowering carry the gradients back.
 """
 import argparse
 
@@ -19,19 +24,22 @@ from repro import configs
 from repro.launch.train import train_loop
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="glm4-9b", choices=configs.ARCH_NAMES)
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--batch", type=int, default=8)
-    a = ap.parse_args()
+    ap.add_argument("--seq-len", type=int, default=64)
+    a = ap.parse_args(argv)
 
     print(f"=== {a.arch} (smoke config), digital baseline ===")
     dig = train_loop(a.arch, smoke=True, steps=a.steps, batch=a.batch,
-                     mode="digital", log_every=max(a.steps // 5, 1))
+                     seq_len=a.seq_len, mode="digital",
+                     log_every=max(a.steps // 5, 1))
     print(f"\n=== {a.arch} (smoke config), analog_faithful (HIL/QAT) ===")
     ana = train_loop(a.arch, smoke=True, steps=a.steps, batch=a.batch,
-                     mode="analog_faithful", log_every=max(a.steps // 5, 1))
+                     seq_len=a.seq_len, mode="analog_faithful",
+                     log_every=max(a.steps // 5, 1))
 
     d0, d1 = np.mean(dig["losses"][:5]), np.mean(dig["losses"][-5:])
     a0, a1 = np.mean(ana["losses"][:5]), np.mean(ana["losses"][-5:])

@@ -2,49 +2,65 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. runs one analog VMM and shows the BSS-2 datapath (5-bit events, 6-bit
-   weights, chunked saturating 8-bit ADC),
-2. swaps a whole LM between digital / analog_faithful / analog_fast,
+1. declares + compiles one analog linear through the ``repro.api`` front
+   door (spec -> compile -> apply) and shows the BSS-2 datapath (5-bit
+   events, 6-bit weights, chunked saturating 8-bit ADC),
+2. compiles a whole LM and swaps it between digital / analog_faithful /
+   analog_fast - same CompiledModel contract at every scale,
 3. prints what the inference would cost on the real BSS-2 mobile system
    (Table-1-calibrated energy model).
 """
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.configs.base import ArchConfig, RunConfig
 from repro.core import BSS2, AnalogConfig, NoiseConfig
-from repro.core.analog import analog_linear_apply, analog_linear_init
+from repro.core.analog import analog_linear_init
 from repro.core.energy import LayerWork, SystemModel
 from repro.models import transformer as T
 
-# ---------------------------------------------------------------- 1. one VMM
-key = jax.random.PRNGKey(0)
-params = analog_linear_init(key, 256, 128, noise=NoiseConfig())
-x = jax.random.normal(key, (4, 256)) * 0.3
 
-y_digital = analog_linear_apply(params, x, AnalogConfig(mode="digital"))
-y_analog = analog_linear_apply(params, x, AnalogConfig())
-rel = float(jnp.abs(y_analog - y_digital).max() / jnp.abs(y_digital).max())
-print(f"[1] analog vs digital linear: rel err {rel:.3f} "
-      f"(W{BSS2.w_bits}A{BSS2.a_bits} + fixed-pattern noise)")
+def main(argv=None):
+    # ------------------------------------------------- 1. one analog linear
+    # declare once -> compile -> apply: the execution contract of the repo
+    key = jax.random.PRNGKey(0)
+    params = analog_linear_init(key, 256, 128, noise=NoiseConfig())
+    x = jax.random.normal(key, (4, 256)) * 0.3
 
-# ------------------------------------------------- 2. a whole LM, one switch
-cfg = ArchConfig("demo", "dense", n_layers=2, d_model=128, n_heads=4,
-                 n_kv_heads=2, d_ff=256, vocab_size=512)
-lm = T.lm_init(jax.random.PRNGKey(1), cfg)
-batch = {"tokens": jax.random.randint(key, (2, 32), 0, 512)}
-for mode in ("digital", "analog_faithful", "analog_fast"):
-    run = RunConfig(analog=AnalogConfig(mode=mode)) if mode != "digital" \
-        else RunConfig()
-    logits, _, _ = T.lm_apply(lm, batch, cfg, run)
-    print(f"[2] mode={mode:16s} logits[0,0,:3] = "
-          f"{jnp.asarray(logits[0, 0, :3]).tolist()}")
+    spec = api.linear_spec(256, 128)
+    y_digital = api.compile(spec, params, AnalogConfig(mode="digital")).apply(x)
+    y_analog = api.compile(spec, params, AnalogConfig()).apply(x)
+    rel = float(jnp.abs(y_analog - y_digital).max()
+                / jnp.abs(y_digital).max())
+    print(f"[1] analog vs digital linear: rel err {rel:.3f} "
+          f"(W{BSS2.w_bits}A{BSS2.a_bits} + fixed-pattern noise)")
 
-# --------------------------------- 3. what would this cost on the real chip?
-shapes = [(128, 512)] * 8          # eight BSS-2-tile-sized matmuls
-m = SystemModel()
-r = m.report([LayerWork(k=k_, n=n_) for k_, n_ in shapes])
-print(f"[3] 8-tile inference on the BSS-2 mobile system: "
-      f"{r['time_s']*1e6:.0f} us, {r['energy_total_j']*1e3:.2f} mJ "
-      f"({r['ops_per_s']/1e6:.0f} MOp/s)")
-print("    (constants calibrated to paper Table 1; see benchmarks/)")
+    # --------------------------------------------- 2. a whole LM, one switch
+    cfg = ArchConfig("demo", "dense", n_layers=2, d_model=128, n_heads=4,
+                     n_kv_heads=2, d_ff=256, vocab_size=512)
+    lm = T.lm_init(jax.random.PRNGKey(1), cfg)
+    lm_spec = T.lm_module_spec(cfg, lm)
+    batch = {"tokens": jax.random.randint(key, (2, 32), 0, 512)}
+    for mode in ("digital", "analog_faithful", "analog_fast"):
+        run = RunConfig(analog=AnalogConfig(mode=mode)) \
+            if mode != "digital" else RunConfig()
+        # compile bakes every analog layer once (attention QKV fused into
+        # one dispatch group); apply replays the plans
+        model = api.compile(lm_spec, lm, run)
+        logits, _, _ = model.apply(batch)
+        print(f"[2] mode={mode:16s} logits[0,0,:3] = "
+              f"{jnp.asarray(logits[0, 0, :3]).tolist()}")
+
+    # ------------------------------- 3. what would this cost on the real chip?
+    shapes = [(128, 512)] * 8          # eight BSS-2-tile-sized matmuls
+    m = SystemModel()
+    r = m.report([LayerWork(k=k_, n=n_) for k_, n_ in shapes])
+    print(f"[3] 8-tile inference on the BSS-2 mobile system: "
+          f"{r['time_s']*1e6:.0f} us, {r['energy_total_j']*1e3:.2f} mJ "
+          f"({r['ops_per_s']/1e6:.0f} MOp/s)")
+    print("    (constants calibrated to paper Table 1; see benchmarks/)")
+
+
+if __name__ == "__main__":
+    main()

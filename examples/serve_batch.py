@@ -1,14 +1,19 @@
 """Batched serving with the analog backend: prefill + decode engine.
 
     PYTHONPATH=src python examples/serve_batch.py --arch stablelm-3b \
-        --requests 12 --max-new 16 [--mode analog_fast]
+        --requests 12 --max-new 16 [--mode analog_fast] [--mesh]
 
 Demonstrates the inference-engine substrate (the `decode_*` dry-run cells
 at smoke scale): request batching, left-padded prefill, per-sequence
-stopping, greedy/categorical sampling - with the model's parameter matmuls
-on emulated analog tiles if requested.
+stopping, greedy/categorical sampling - with the model's parameter
+matmuls on emulated analog tiles if requested.  The engine goes through
+the `repro.api` front door: the model is compiled ONCE (attention QKV
+fused into one dispatch group) and the jitted steps replay the baked
+plans - also under an active mesh (``--mesh``), where the plan leaves
+shard by the same logical axes as the weights they were baked from.
 """
 import argparse
+import contextlib
 import time
 
 import numpy as np
@@ -16,13 +21,14 @@ import numpy as np
 from repro import configs
 from repro.configs.base import RunConfig
 from repro.core.analog import AnalogConfig
+from repro.distributed import sharding as shd
 from repro.models import transformer as T
 from repro.serve.engine import Request, ServeEngine
 
 import jax
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-3b",
                     choices=configs.ARCH_NAMES)
@@ -31,7 +37,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--mode", default="digital",
                     choices=["digital", "analog_faithful", "analog_fast"])
-    a = ap.parse_args()
+    ap.add_argument("--mesh", action="store_true",
+                    help="serve under a (data, model) host mesh with "
+                         "sharded pre-lowered plans")
+    a = ap.parse_args(argv)
 
     cfg = configs.get_smoke(a.arch)
     if not cfg.embed_inputs:
@@ -40,8 +49,10 @@ def main():
     run = RunConfig(analog=AnalogConfig(mode=a.mode)) if a.mode != "digital" \
         else RunConfig()
     params = T.lm_init(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(cfg, run, params, batch_size=a.batch, max_len=128)
-
+    mesh_ctx = contextlib.nullcontext()
+    if a.mesh:
+        n = len(jax.devices())
+        mesh_ctx = shd.use_mesh(jax.make_mesh((n, 1), ("data", "model")))
     rng = np.random.default_rng(0)
     reqs = [
         Request(uid=i,
@@ -49,9 +60,12 @@ def main():
                 max_new_tokens=a.max_new)
         for i in range(a.requests)
     ]
-    t0 = time.time()
-    done = engine.serve(reqs)
-    dt = time.time() - t0
+    with mesh_ctx:
+        engine = ServeEngine(cfg, run, params, batch_size=a.batch,
+                             max_len=128)
+        t0 = time.time()
+        done = engine.serve(reqs)
+        dt = time.time() - t0
     total_new = sum(len(r.output) for r in done)
     print(f"arch={a.arch} mode={a.mode}: served {len(done)} requests, "
           f"{total_new} tokens in {dt:.1f}s "

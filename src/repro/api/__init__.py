@@ -1,0 +1,29 @@
+"""The public execution api: one front door for analog models.
+
+    spec  = <model>_module_spec(...)            # declare layers ONCE
+    model = api.compile(spec, params, run_cfg)  # -> CompiledModel
+    y     = model.apply(x)                      # run
+    plan  = model.lower()                       # replayable artifact
+    axes  = model.sharding_specs()              # mesh-shardable, plans incl.
+
+``compile()`` is the only non-deprecated way to obtain an executable
+analog model; the legacy entrypoints (``analog_linear_apply``,
+``linear_lower``, ``ecg_lower``, ``prelower_tree``) are deprecation shims
+forwarding here.  :mod:`repro.exec` remains the internal substrate this
+api drives (plans, lowering, the fused executor).
+"""
+from repro.api.compile import (  # noqa: F401
+    compile,
+    iter_analog_layers,
+    lower_tree,
+    tree_spec,
+)
+from repro.api.module import (  # noqa: F401
+    LayerSpec,
+    ModuleSpec,
+    linear_spec,
+)
+from repro.api.program import (  # noqa: F401
+    CompiledModel,
+    apply_linear,
+)

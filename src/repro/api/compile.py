@@ -1,0 +1,223 @@
+"""``compile(spec, params, run_cfg) -> CompiledModel``: the one lowering
+pipeline from a declared model to an executable analog program.
+
+This is the front door over :mod:`repro.exec` (ISSUE 2).  Everything that
+used to be reachable through four scattered entrypoints
+(``analog_linear_apply`` per-call lowering, ``linear_lower``,
+``ecg_lower``/``ecg_apply_plan``, ``prelower_tree``) funnels through here:
+
+- stack specs lower to one :class:`~repro.exec.plan.AnalogPlan` via
+  :func:`repro.exec.lower.lower_stack`,
+- tree specs pre-lower every analog layer *in place* in the params pytree
+  (``"_plan"`` entries), including layers stacked for ``jax.lax.scan``
+  (lowering is vmapped over the stack axis - the legacy ``prelower_tree``
+  skipped those entirely), and fuse same-input dispatch groups (attention
+  QKV) into ONE analog pass via ``"_qkv_plan"`` entries
+  (:func:`repro.exec.lower.lower_fused`).
+
+The lowering is built from STE quantizers end to end, so calling
+``compile`` *inside* a differentiated function reproduces the HIL training
+contract (gradients reach the float masters through the baked plans);
+calling it once outside and replaying the result is the serve/eval
+contract.  Both paths execute the same plans - bit-exact by construction.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import jax
+
+from repro.core.analog import AnalogConfig
+from repro.exec.lower import lower_fused, lower_layer, lower_stack
+from repro.api.module import STACK, TREE, LayerSpec, ModuleSpec
+from repro.api.program import CompiledModel
+
+# the attention dispatch group: same post-norm input, fused columns
+_QKV = ("wq", "wk", "wv")
+_QKV_PLAN = "_qkv_plan"
+_PLAN = "_plan"
+
+
+def _acfg(run_cfg) -> AnalogConfig:
+    """Accept a RunConfig (has .analog) or a bare AnalogConfig."""
+    return getattr(run_cfg, "analog", run_cfg)
+
+
+def _is_analog_layer(node) -> bool:
+    """An analog linear's parameter dict - 2-D, or 3-D when stacked with a
+    leading scan axis (vmapped init).  Raw stacked arrays (MoE experts)
+    are NOT layer dicts and keep their per-call lowering."""
+    return (
+        isinstance(node, dict)
+        and "w" in node and "w_scale" in node and "gain" in node
+        and getattr(node["w"], "ndim", 0) in (2, 3)
+    )
+
+
+def _is_qkv_group(node: dict) -> bool:
+    """Same-input attention projections: fuse into one dispatch group.
+    (RWKV's wr/wk/wv/wg each consume a different token-shift mix, so the
+    mere presence of wk/wv does not qualify - the wq key is the marker.)"""
+    if not all(k in node and _is_analog_layer(node[k]) for k in _QKV):
+        return False
+    dims = {node[k]["w"].ndim for k in _QKV}
+    kdims = {node[k]["w"].shape[-2] for k in _QKV}
+    return len(dims) == 1 and len(kdims) == 1
+
+
+def _lower_leaf(node: dict, acfg: AnalogConfig):
+    """Lower one analog layer dict; vmap over a leading scan-stack axis."""
+    if node["w"].ndim == 3:
+        return jax.vmap(lambda p: lower_layer(p, acfg))(node)
+    return lower_layer(node, acfg)
+
+
+def _lower_qkv(node: dict, acfg: AnalogConfig):
+    qkv = [node[k] for k in _QKV]
+    if node["wq"]["w"].ndim == 3:
+        return jax.vmap(lambda q, k, v: lower_fused([q, k, v], acfg))(*qkv)
+    return lower_fused(qkv, acfg)
+
+
+def lower_tree(params, run_cfg, *, fuse_groups: bool = True):
+    """Pre-lower every analog layer in a params pytree (the successor of
+    ``exec.lower.prelower_tree``): each analog-layer dict gains a
+    ``"_plan"`` entry, attention dicts gain a fused ``"_qkv_plan"`` (one
+    dispatch for the three projections; their per-layer plans are elided),
+    and scan-stacked layer dicts are lowered under vmap so the plans flow
+    through ``jax.lax.scan`` with the stacked params.
+
+    Returns the params tree unchanged in digital mode.  Inference
+    contract: gradients taken *through* a pre-built tree stop at the baked
+    ``w_eff``; training must call this inside the differentiated step (the
+    STE quantizers then carry gradients to the float masters).
+    """
+    acfg = _acfg(run_cfg)
+    if acfg.mode == "digital":
+        return params
+    # fusion assumes one shared input quantization; static per-layer
+    # activation scales may differ, so only fuse under dynamic calibration
+    fuse = fuse_groups and acfg.act_calib == "dynamic"
+
+    def walk(node):
+        if _is_analog_layer(node):
+            out = dict(node)
+            out[_PLAN] = _lower_leaf(node, acfg)
+            return out
+        if isinstance(node, dict):
+            fused = fuse and _is_qkv_group(node)
+            out = {}
+            for k, v in node.items():
+                out[k] = dict(v) if fused and k in _QKV else walk(v)
+            if fused:
+                out[_QKV_PLAN] = _lower_qkv(node, acfg)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)
+
+
+def iter_analog_layers(params) -> Iterator[Tuple[str, dict]]:
+    """Yield (dotted_path, layer_params) for every analog layer dict in a
+    params pytree (abstract trees work too - only shapes are read)."""
+
+    def walk(node, path):
+        if _is_analog_layer(node):
+            yield ".".join(path), node
+            return
+        if isinstance(node, dict):
+            for k in node:
+                yield from walk(node[k], path + [k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                yield from walk(v, path + [str(i)])
+
+    yield from walk(params, [])
+
+
+def tree_spec(name: str, params, *, param_axes=None, apply_fn=None,
+              axes_of=None) -> ModuleSpec:
+    """Build a tree-kind :class:`ModuleSpec` by walking a params pytree
+    (concrete or abstract): one :class:`LayerSpec` per analog layer, with
+    attention QKV triples marked as a shared dispatch ``group``.
+    ``axes_of(path) -> (in_name, out_name)`` supplies sharding axes.
+
+    Contract note: for tree specs the layer list is *descriptive* - the
+    declaration is derived from the params structure by the same walk
+    :func:`lower_tree` lowers with, so the two cannot disagree; it exists
+    for introspection (``spec.layer(path)``, docs, tests).  Lowering and
+    sharding of tree models are driven by the structure + ``param_axes``,
+    not by editing individual LayerSpecs (stack specs, by contrast, are
+    compiled field-by-field from their declarations)."""
+    layers = []
+    for path, node in iter_analog_layers(params):
+        w = node["w"]
+        stacked = w.shape[0] if w.ndim == 3 else 0
+        group = None
+        leaf = path.rsplit(".", 1)[-1]
+        if leaf in _QKV:
+            group = path.rsplit(".", 1)[0] + ".qkv" if "." in path else "qkv"
+        layers.append(LayerSpec(
+            name=path,
+            in_dim=int(w.shape[-2]),
+            out_dim=int(w.shape[-1]),
+            sharding=axes_of(path) if axes_of else (None, None),
+            group=group,
+            stacked=stacked,
+        ))
+    return ModuleSpec(name=name, layers=tuple(layers), kind=TREE,
+                      apply_fn=apply_fn, param_axes=param_axes)
+
+
+def _compile_stack(spec: ModuleSpec, params, acfg: AnalogConfig):
+    layer_params = []
+    for l in spec.layers:
+        if _is_analog_layer(params):          # single-layer convenience:
+            p = params                        # the layer dict itself
+        elif isinstance(params, dict) and l.name in params:
+            p = params[l.name]
+        else:
+            raise ValueError(
+                f"spec layer {l.name!r}: no analog layer params found"
+            )
+        if not _is_analog_layer(p):
+            raise ValueError(
+                f"spec layer {l.name!r}: params are not an analog layer "
+                "dict (need w / w_scale / gain)"
+            )
+        got = tuple(p["w"].shape[-2:])
+        if got != (l.in_dim, l.out_dim):
+            raise ValueError(
+                f"spec layer {l.name!r} declares "
+                f"{(l.in_dim, l.out_dim)} but params are {got}"
+            )
+        layer_params.append(p)
+    return lower_stack(
+        layer_params, acfg,
+        signed_inputs=[l.signed_input for l in spec.layers],
+        epilogues=[l.epilogue for l in spec.layers],
+        flatten_outs=[l.flatten_out for l in spec.layers],
+    )
+
+
+def compile(spec: ModuleSpec, params, run_cfg) -> CompiledModel:  # noqa: A001
+    """Compile a declared model against concrete parameters.
+
+    ``run_cfg`` is a RunConfig (serve/train) or bare AnalogConfig.  In
+    digital mode no plans are built and ``apply`` runs the digital
+    reference path; otherwise every analog layer is lowered exactly once
+    (stack -> one AnalogPlan; tree -> plan entries beside the params).
+    """
+    acfg = _acfg(run_cfg)
+    if spec.kind == STACK:
+        lowered = None if acfg.mode == "digital" else _compile_stack(
+            spec, params, acfg
+        )
+    elif spec.kind == TREE:
+        lowered = lower_tree(params, acfg)
+    else:
+        raise ValueError(f"unknown spec kind {spec.kind!r}")
+    return CompiledModel(spec=spec, params=params, run_cfg=run_cfg,
+                         lowered=lowered)

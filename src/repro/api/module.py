@@ -1,0 +1,93 @@
+"""Declarative module specs: the "declare once" half of the hxtorch-style
+front door (Spilger et al. 2020 expose analog layers as ordinary modules;
+the configuration step is derived from the declaration, not hand-wired).
+
+A :class:`ModuleSpec` names every analog layer of a model exactly once -
+name, in/out dims, inter-layer epilogue, logical sharding axes, and the
+fusion ``group`` it dispatches with - and :func:`repro.api.compile` turns
+(spec, params, run_cfg) into a :class:`repro.api.program.CompiledModel`.
+
+Two spec kinds cover every model in this repo:
+
+- ``"stack"``: the layers ARE the model - an ordered chain executed as one
+  :class:`repro.exec.plan.AnalogPlan` (the ECG net, the quickstart linear).
+- ``"tree"``: the analog layers live inside a larger host program
+  (attention softmax, recurrences, routing stay digital).  The spec lists
+  them by dotted path into the params pytree; compile() bakes a plan next
+  to each layer's parameters and the host program replays them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+STACK = "stack"
+TREE = "tree"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One analog layer, declared once.
+
+    name:         layer name ("fc1") or dotted path into the params tree
+                  ("layers.l0.attn.wq"; a leading stack axis is marked by
+                  ``stacked``).
+    in_dim/out_dim: logical matmul dims (pre chunk padding).
+    signed_input: per-layer override of ``cfg.signed_input`` or None.
+    epilogue:     ADC hand-off to the NEXT stacked layer ("none" float
+                  glue | "relu_shift" code-domain chain).
+    flatten_out:  flatten trailing output dims before the next layer.
+    sharding:     logical axis names of the (in, out) weight dims.
+    group:        fusion group id - layers sharing a group (and their
+                  input) lower into ONE dispatch over concatenated output
+                  columns (the QKV fusion).
+    stacked:      leading scan-stack size (0 = plain 2-D layer).
+    """
+
+    name: str
+    in_dim: int
+    out_dim: int
+    signed_input: Optional[str] = None
+    epilogue: str = "none"
+    flatten_out: bool = False
+    sharding: Tuple[Optional[str], Optional[str]] = (None, None)
+    group: Optional[str] = None
+    stacked: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModuleSpec:
+    """A model's analog declaration: what to compile, not how to run it.
+
+    apply_fn(model, *args, **kw) is the host program executed by
+    ``CompiledModel.apply``; stacks default to running their plan.
+    param_axes is the logical-axis spec pytree of the *raw* params (tree
+    kind); compile() augments it with the baked plan leaves, which is what
+    makes pre-lowered trees shardable (see distributed.sharding).
+    """
+
+    name: str
+    layers: Tuple[LayerSpec, ...] = ()
+    kind: str = STACK
+    apply_fn: Optional[Callable] = None
+    param_axes: Any = None
+
+    def layer(self, name: str) -> LayerSpec:
+        for l in self.layers:
+            if l.name == name:
+                return l
+        raise KeyError(name)
+
+
+def linear_spec(in_dim: int, out_dim: int, *, name: str = "layer",
+                signed_input: Optional[str] = None,
+                sharding: Tuple[Optional[str], Optional[str]] = (None, None),
+                ) -> ModuleSpec:
+    """Spec for a single analog linear layer (params = {name: layer_params}
+    or the layer params dict itself)."""
+    return ModuleSpec(
+        name=f"linear_{in_dim}x{out_dim}",
+        layers=(LayerSpec(name, in_dim, out_dim, signed_input=signed_input,
+                          sharding=sharding),),
+        kind=STACK,
+    )

@@ -1,0 +1,149 @@
+"""Compiled analog programs: :class:`CompiledModel` plus the canonical
+single-layer :func:`apply_linear` (the function every model matmul routes
+through; ``repro.core.analog.analog_linear_apply`` is its deprecation
+shim).
+
+``CompiledModel`` is the one executable object the serve engine, the train
+step, eval loops and the examples consume:
+
+    model = api.compile(spec, params, run_cfg)
+    y     = model.apply(x)              # run the compiled program
+    plan  = model.lower()               # AnalogPlan (stack) / lowered tree
+    model = model.relower(new_params)   # re-bake after a weight update
+    axes  = model.sharding_specs()      # logical-axis specs incl. plans
+
+Lifecycle contract (unchanged from repro.exec): training calls
+``compile``/``relower`` inside the differentiated step so HIL gradients
+reach the float masters; serve and eval compile once and replay
+``lower()``'s output through jitted steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import AnalogConfig
+from repro.exec.lower import lower_layer
+from repro.exec.plan import AnalogPlan
+from repro.exec.run import run as run_plan
+from repro.exec.run import run_layer
+
+
+def apply_linear(
+    params: dict,
+    x: jax.Array,
+    cfg: AnalogConfig,
+    *,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Apply one analog (or digital) linear layer: x [..., K] -> y [..., N].
+
+    The single-layer hot path of the api: a pre-baked ``"_plan"`` entry in
+    ``params`` (placed there by :func:`repro.api.compile.lower_tree`) is
+    replayed directly; otherwise the layer is lowered per call with STE
+    quantizers, which is exactly the HIL training scheme.  A baked plan
+    whose static execution attrs disagree with the call-site config is
+    ignored (per-call lowering takes over) rather than silently running
+    the wrong encoding.
+    """
+    if cfg.mode == "digital":
+        y = jnp.einsum("...k,kn->...n", x, params["w"].astype(x.dtype))
+        if "b" in params:
+            y = y + params["b"].astype(y.dtype)
+        return y
+    lp = params.get("_plan")
+    if lp is not None and (
+        lp.signed_input != cfg.signed_input
+        or lp.chunk_rows != cfg.chunk_rows
+    ):
+        lp = None
+    if lp is None:
+        lp = lower_layer(params, cfg)
+    return run_layer(lp, x, cfg, key=key)
+
+
+@dataclasses.dataclass
+class CompiledModel:
+    """An executable analog model: declaration + params + baked plans."""
+
+    spec: Any                      # ModuleSpec
+    params: Any                    # the float master parameter pytree
+    run_cfg: Any                   # RunConfig or AnalogConfig
+    lowered: Any                   # AnalogPlan | lowered tree | None (digital)
+
+    @property
+    def acfg(self) -> AnalogConfig:
+        return getattr(self.run_cfg, "analog", self.run_cfg)
+
+    # ------------------------------------------------------------- execute
+    def apply(self, *args, **kw):
+        """Run the compiled program.  Stacks take ``(x, *, key=None)``;
+        tree specs forward to the host program declared by the spec
+        (``spec.apply_fn(model, *args, **kw)``)."""
+        if self.spec.apply_fn is not None:
+            return self.spec.apply_fn(self, *args, **kw)
+        if self.spec.kind != "stack":
+            raise ValueError(
+                f"spec {self.spec.name!r} declares no apply_fn"
+            )
+        return self.run_stack(*args, **kw)
+
+    def run_stack(self, x: jax.Array, *, key: Optional[jax.Array] = None
+                  ) -> jax.Array:
+        """Execute the layer chain (plan replay, or the digital reference
+        path with the same ReLU/flatten inter-layer glue)."""
+        if self.lowered is not None:
+            return run_plan(self.lowered, x, key=key)
+        h = x
+        n = len(self.spec.layers)
+        for i, l in enumerate(self.spec.layers):
+            if isinstance(self.params, dict) and l.name in self.params:
+                p = self.params[l.name]
+            else:
+                p = self.params        # single-layer convenience
+            h = apply_linear(p, h, self.acfg)
+            if i < n - 1:
+                h = jax.nn.relu(h)
+            if l.flatten_out:
+                h = h.reshape(h.shape[0], -1)
+        return h
+
+    # --------------------------------------------------------------- plans
+    def lower(self):
+        """The compiled artifact that jitted steps replay: the stack's
+        :class:`AnalogPlan`, or the pre-lowered params tree (tree kind;
+        the raw params in digital mode)."""
+        if self.spec.kind == "stack":
+            return self.lowered
+        return self.params if self.lowered is None else self.lowered
+
+    def relower(self, params) -> "CompiledModel":
+        """Re-bake the plans for updated parameters (one weight update =
+        one relower; the spec and run config are reused)."""
+        from repro.api.compile import compile as _compile
+
+        return _compile(self.spec, params, self.run_cfg)
+
+    # ------------------------------------------------------------ sharding
+    def sharding_specs(self):
+        """Logical-axis spec pytree matching :meth:`lower`'s output -
+        including the baked plan leaves, so a pre-lowered tree shards over
+        a mesh exactly like ordinary params (see distributed.sharding)."""
+        from repro.distributed import sharding as shd
+
+        if self.spec.kind == "stack":
+            if not isinstance(self.lowered, AnalogPlan):
+                return None
+            axes = [l.sharding for l in self.spec.layers]
+            return shd.analog_plan_specs(self.lowered, axes)
+        base = self.spec.param_axes
+        if base is None:
+            raise ValueError(
+                f"spec {self.spec.name!r} carries no param_axes"
+            )
+        if self.lowered is None:
+            return base
+        return shd.plan_specs_like(base, self.lowered)

@@ -269,36 +269,17 @@ def analog_linear_apply(
     *,
     key: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Apply one analog (or digital) linear layer: x [..., K] -> y [..., N].
-
-    Thin single-layer wrapper over the exec plan pipeline: the parameters
-    are lowered to a one-layer :class:`repro.exec.plan.LayerPlan` (STE
-    quantizers, so HIL gradients reach the float masters) and executed by
-    :func:`repro.exec.run.run_layer`.  Call sites that run many forwards
-    per weight update should lower once via :mod:`repro.exec.lower`
-    (or :func:`repro.exec.lower.prelower_tree` for whole param trees - the
-    serve engine does) and reuse the plan; a pre-lowered ``"_plan"`` entry
-    in ``params`` is picked up here automatically.
+    """DEPRECATED: use :func:`repro.api.apply_linear` (one-off layers) or
+    ``repro.api.compile`` (models).  Bit-exact shim over the api front
+    door - the implementation moved to :mod:`repro.api.program` (ISSUE 2).
     """
-    if cfg.mode == "digital":
-        y = jnp.einsum("...k,kn->...n", x, params["w"].astype(x.dtype))
-        if "b" in params:
-            y = y + params["b"].astype(y.dtype)
-        return y
+    import warnings
 
-    from repro.exec.lower import lower_layer
-    from repro.exec.run import run_layer
+    warnings.warn(
+        "analog_linear_apply is deprecated; use repro.api.apply_linear "
+        "or repro.api.compile",
+        DeprecationWarning, stacklevel=2,
+    )
+    from repro.api.program import apply_linear
 
-    lp = params.get("_plan")
-    if lp is not None and (
-        lp.signed_input != cfg.signed_input
-        or lp.chunk_rows != cfg.chunk_rows
-    ):
-        # the pre-lowered plan baked different static execution attrs
-        # than this call site requests (e.g. a signed_input override on a
-        # prelowered tree): fall back to per-call lowering rather than
-        # silently running the baked encoding
-        lp = None
-    if lp is None:
-        lp = lower_layer(params, cfg)
-    return run_layer(lp, x, cfg, key=key)
+    return apply_linear(params, x, cfg, key=key)

@@ -225,3 +225,87 @@ def rules_for(run) -> dict:
     if not getattr(run, "seq_sp", True):
         rules["seq_sp"] = ()
     return rules
+
+
+# --------------------------------------------------------------------------
+# Pre-lowered plan leaves (repro.exec plans) as first-class shardables:
+# a LayerPlan's arrays carry the SAME logical axes as the weight they were
+# baked from, so a pre-lowered params tree shards over the mesh exactly
+# like the raw params tree (ISSUE 2 - this is what retires the old
+# "no pre-lowering under a mesh" restriction in serve/engine.py).
+# --------------------------------------------------------------------------
+def layer_plan_specs(lp, w_spec: Sequence[Optional[str]]):
+    """Spec pytree (a LayerPlan holding logical-name tuples) for one -
+    possibly scan-stacked - LayerPlan.
+
+    ``w_spec`` is the logical spec of the master weight, e.g.
+    ``("embed", "mlp")`` or ``("layers", "embed", "mlp")`` for a stacked
+    layer: the trailing two names are the (in, out) axes, anything before
+    them is the stack prefix shared by every baked array.
+    """
+    import dataclasses
+
+    w_spec = tuple(w_spec)
+    prefix, in_name, out_name = w_spec[:-2], w_spec[-2], w_spec[-1]
+    nd = len(prefix)         # rank of the stack prefix
+
+    def per_col(leaf):       # [*, N]-shaped leaves (gain may be scalar)
+        if leaf is None:
+            return None
+        return prefix + (out_name,) if leaf.ndim > nd else prefix
+
+    return dataclasses.replace(
+        lp,
+        w_eff=w_spec,
+        w_scale=prefix + (None, out_name),
+        a_scale=prefix,
+        gain=per_col(lp.gain),
+        chunk_offset=(
+            None if lp.chunk_offset is None
+            else prefix + ("chunks", out_name)
+        ),
+        colsum=None if lp.colsum is None else prefix + (out_name,),
+        bias=None if lp.bias is None else prefix + (out_name,),
+    )
+
+
+def analog_plan_specs(plan, layer_axes: Sequence[Sequence[Optional[str]]]):
+    """Spec pytree for a whole AnalogPlan: ``layer_axes[i]`` is the
+    (in_name, out_name) pair of layer i."""
+    import dataclasses
+
+    layers = tuple(
+        layer_plan_specs(lp, tuple(ax))
+        for lp, ax in zip(plan.layers, layer_axes)
+    )
+    return dataclasses.replace(plan, layers=layers)
+
+
+def plan_specs_like(spec_tree, lowered_tree):
+    """Augment a logical-axis spec tree with entries for the ``"_plan"`` /
+    ``"_qkv_plan"`` leaves of a pre-lowered params tree, so the result
+    matches the lowered tree's structure leaf for leaf.
+
+    Plan axes are derived from the sibling master-weight specs: a layer's
+    ``"_plan"`` inherits its own ``"w"`` spec; a fused ``"_qkv_plan"``
+    inherits the ``wq`` weight's spec (the concatenated output columns
+    keep the head axis; shape-aware resolution falls back to replication
+    when the fused width does not divide the mesh axis).
+    """
+    if isinstance(lowered_tree, dict):
+        out = {}
+        for k, v in lowered_tree.items():
+            if k == "_plan":
+                out[k] = layer_plan_specs(v, spec_tree["w"])
+            elif k == "_qkv_plan":
+                out[k] = layer_plan_specs(v, spec_tree["wq"]["w"])
+            else:
+                out[k] = plan_specs_like(spec_tree[k], v)
+        return out
+    if isinstance(lowered_tree, (list, tuple)) and not _SPEC_LEAF(
+        lowered_tree
+    ):
+        return type(lowered_tree)(
+            plan_specs_like(s, v) for s, v in zip(spec_tree, lowered_tree)
+        )
+    return spec_tree

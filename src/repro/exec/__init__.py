@@ -11,6 +11,7 @@ each step; serve/eval lower once and replay).
 """
 from repro.exec.lower import (  # noqa: F401
     lower,
+    lower_fused,
     lower_layer,
     lower_stack,
     prelower_tree,

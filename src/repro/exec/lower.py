@@ -128,34 +128,89 @@ def lower(params: Params, cfg: AnalogConfig, **kw) -> AnalogPlan:
     return AnalogPlan(layers=(lower_layer(params, cfg, **kw),), cfg=cfg)
 
 
-def _is_analog_layer(node) -> bool:
-    # Stacked variants (e.g. MoE experts [E, K, N]) are applied under vmap
-    # with per-expert 2-D slices; they lower per call, not here.
-    return (
-        isinstance(node, dict)
-        and "w" in node and "w_scale" in node and "gain" in node
-        and getattr(node["w"], "ndim", 0) == 2
+def lower_fused(
+    layer_params: Sequence[Params],
+    cfg: AnalogConfig,
+    *,
+    signed_input: Optional[str] = None,
+) -> LayerPlan:
+    """Lower N same-input layers into ONE dispatch group: their output
+    columns are concatenated into a single [K_pad, sum(N_i)] effective
+    weight matrix, so the executor issues one analog pass where the
+    per-layer path issued N (the QKV fusion of whole-block plans).
+
+    Column-exact by construction: every per-column quantity (weight scale,
+    gain, chunk offsets, the per-chunk ADC saturation) is independent
+    across columns, so fusing is bit-identical to the per-layer dispatches
+    as long as all layers share the input encoding.  That holds under
+    dynamic activation calibration (the default; the scale is recomputed
+    from the shared input at run time) - the fused plan stores the FIRST
+    layer's static ``a_scale``, so callers should not fuse statically
+    calibrated layers with differing scales.
+    """
+    plans = [lower_layer(p, cfg, signed_input=signed_input)
+             for p in layer_params]
+    k = plans[0].k
+    for lp in plans:
+        if lp.k != k or lp.chunk_rows != plans[0].chunk_rows:
+            raise ValueError(
+                "fused layers must share the input dim and chunk geometry: "
+                f"{[(p.k, p.chunk_rows) for p in plans]}"
+            )
+    n_tot = sum(lp.n for lp in plans)
+    cat = lambda xs: jnp.concatenate(xs, axis=-1)
+    chunk_off = None
+    if any(lp.chunk_offset is not None for lp in plans):
+        c = plans[0].n_chunks
+        chunk_off = cat([
+            lp.chunk_offset if lp.chunk_offset is not None
+            else jnp.zeros(lp.w_eff.shape[:-2] + (c, lp.n), jnp.float32)
+            for lp in plans
+        ])
+    colsum = None
+    if any(lp.colsum is not None for lp in plans):
+        colsum = cat([
+            lp.colsum if lp.colsum is not None
+            else jnp.zeros(lp.w_eff.shape[:-2] + (lp.n,), jnp.float32)
+            for lp in plans
+        ])
+    bias = None
+    if any(lp.bias is not None for lp in plans):
+        bias = cat([
+            lp.bias if lp.bias is not None
+            else jnp.zeros(lp.w_eff.shape[:-2] + (lp.n,), jnp.float32)
+            for lp in plans
+        ])
+    return LayerPlan(
+        w_eff=cat([lp.w_eff for lp in plans]),
+        w_scale=cat([lp.w_scale for lp in plans]),
+        a_scale=plans[0].a_scale,
+        gain=cat([jnp.broadcast_to(lp.gain, lp.w_eff.shape[:-2] + (lp.n,))
+                  for lp in plans]),
+        chunk_offset=chunk_off,
+        colsum=colsum,
+        bias=bias,
+        k=k,
+        n=n_tot,
+        chunk_rows=plans[0].chunk_rows,
+        signed_input=plans[0].signed_input,
+        epilogue=EPILOGUE_NONE,
+        shift=0,
     )
 
 
 def prelower_tree(params, cfg: AnalogConfig):
-    """Pre-lower every analog layer in an arbitrary params pytree
-    (inference/serve path): each analog-layer dict gains a ``"_plan"``
-    entry holding its :class:`LayerPlan`, which ``analog_linear_apply``
-    picks up instead of re-deriving ``w_code``/``w_eff``/offsets on every
-    forward.  The result is still a params pytree (plans are pytrees), so
-    it flows through the jitted serve steps unchanged.
+    """DEPRECATED: use :func:`repro.api.lower_tree` (or, one level up,
+    ``repro.api.compile``).  Bit-exact shim: the structure-aware walk -
+    now also covering scan-stacked layers and fusing attention QKV into
+    one dispatch group - lives in :mod:`repro.api.compile` (ISSUE 2)."""
+    import warnings
 
-    Inference-only: gradients taken against a pre-lowered tree stop at the
-    baked ``w_eff`` instead of reaching ``w`` - the train step must lower
-    from the float masters each step instead (see module docstring).
-    """
-    if _is_analog_layer(params):
-        out = dict(params)
-        out["_plan"] = lower_layer(params, cfg)
-        return out
-    if isinstance(params, dict):
-        return {k: prelower_tree(v, cfg) for k, v in params.items()}
-    if isinstance(params, (list, tuple)):
-        return type(params)(prelower_tree(v, cfg) for v in params)
-    return params
+    warnings.warn(
+        "prelower_tree is deprecated; use repro.api.lower_tree / "
+        "repro.api.compile",
+        DeprecationWarning, stacklevel=2,
+    )
+    from repro.api.compile import lower_tree
+
+    return lower_tree(params, cfg)

@@ -90,9 +90,29 @@ def attention_apply(params, x, *, positions, acfg: AnalogConfig, n_heads,
     b, s, _ = x.shape
     g = n_heads // n_kv_heads
     ks = jax.random.split(key, 4) if key is not None else (None,) * 4
-    q = L.linear_apply(params["wq"], x, acfg, key=ks[0])
-    k = L.linear_apply(params["wk"], x, acfg, key=ks[1])
-    v = L.linear_apply(params["wv"], x, acfg, key=ks[2])
+    qkv_lp = params.get("_qkv_plan") if acfg.mode != "digital" else None
+    if qkv_lp is not None and (
+        qkv_lp.signed_input != acfg.signed_input
+        or qkv_lp.chunk_rows != acfg.chunk_rows
+        # a fused plan stores ONE static a_scale (wq's): only valid when
+        # the call site recomputes the scale per call (dynamic calib)
+        or acfg.act_calib != "dynamic"
+    ):
+        qkv_lp = None        # baked attrs disagree with this call site
+    if qkv_lp is not None:
+        # whole-block plan (repro.api): the three same-input projections
+        # were fused into ONE dispatch group at compile time - one analog
+        # pass over concatenated output columns instead of three
+        from repro.exec.run import run_layer
+
+        qkv = run_layer(qkv_lp, x, acfg, key=ks[0])
+        nq = n_heads * head_dim
+        nkv = n_kv_heads * head_dim
+        q, k, v = jnp.split(qkv, [nq, nq + nkv], axis=-1)
+    else:
+        q = L.linear_apply(params["wq"], x, acfg, key=ks[0])
+        k = L.linear_apply(params["wk"], x, acfg, key=ks[1])
+        v = L.linear_apply(params["wv"], x, acfg, key=ks[2])
     q = q.reshape(b, s, n_heads, head_dim)
     k = k.reshape(b, s, n_kv_heads, head_dim)
     v = v.reshape(b, s, n_kv_heads, head_dim)

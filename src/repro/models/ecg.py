@@ -22,7 +22,6 @@ import jax.numpy as jnp
 from repro.core.analog import AnalogConfig, analog_linear_init
 from repro.core.energy import LayerWork
 from repro.core.noise import NoiseConfig
-from repro.models import layers as L
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,28 +80,62 @@ def _im2col(x, taps, stride):
     return cols.transpose(0, 2, 3, 1).reshape(b, npos, taps * c)
 
 
-def ecg_lower(params, acfg: AnalogConfig, cfg: ECGConfig = ECGConfig(), *,
-              epilogue: str = "none"):
-    """Lower the conv->fc1->fc2 chain to ONE AnalogPlan (exec subsystem).
+def ecg_module_spec(cfg: ECGConfig = ECGConfig(), *,
+                    epilogue: str = "none"):
+    """Declare the Fig.-6 CDNN once for the api front door: a stack spec
+    whose compiled form runs conv->fc1->fc2 as ONE analog program.
 
     ``epilogue`` selects the inter-layer hand-off:
     - "none": float glue - dequantize, ReLU, re-quantize at the next layer
       (the pre-plan module-by-module semantics, bit-compatible).
     - "relu_shift": the hardware chain of paper §II-A - ReLU at the ADC +
       right-shift requantization to 5-bit codes, so the whole stack runs
-      in the code domain as one jitted analog program with no float glue
-      (and, with ``acfg.use_pallas`` + ``acfg.fused_epilogue``, the
-      epilogue is emitted inside the Pallas kernel).
+      in the code domain with no float glue (and, with
+      ``acfg.use_pallas`` + ``acfg.fused_epilogue``, the epilogue is
+      emitted inside the Pallas kernel).
     """
-    from repro.exec.lower import lower_stack
+    from repro import api
 
-    return lower_stack(
-        [params["conv"], params["fc1"], params["fc2"]],
-        acfg,
-        signed_inputs=["none", "none", "none"],
-        epilogues=[epilogue, epilogue, "none"],
-        flatten_outs=[True, False, False],
+    def _apply(model, x, *, train: bool = False, key=None):
+        cols = _im2col(x, cfg.conv_taps, cfg.conv_stride)
+        out = model.run_stack(cols, key=key)
+        return _pool_class_copies(out, cfg, train)
+
+    return api.ModuleSpec(
+        name="ecg_cdnn",
+        kind="stack",
+        apply_fn=_apply,
+        layers=(
+            api.LayerSpec("conv", cfg.conv_taps * cfg.in_channels,
+                          cfg.conv_channels, signed_input="none",
+                          epilogue=epilogue, flatten_out=True),
+            api.LayerSpec("fc1", cfg.conv_cols, cfg.hidden,
+                          signed_input="none", epilogue=epilogue),
+            api.LayerSpec("fc2", cfg.hidden,
+                          cfg.classes * cfg.class_copies,
+                          signed_input="none"),
+        ),
     )
+
+
+def ecg_lower(params, acfg: AnalogConfig, cfg: ECGConfig = ECGConfig(), *,
+              epilogue: str = "none"):
+    """DEPRECATED: use ``repro.api.compile(ecg_module_spec(cfg), params,
+    acfg)`` - ``CompiledModel.lower()`` returns the same AnalogPlan,
+    ``CompiledModel.apply`` replaces :func:`ecg_apply_plan`.  Bit-exact
+    shim over the api front door (ISSUE 2)."""
+    import warnings
+
+    warnings.warn(
+        "ecg_lower is deprecated; use repro.api.compile with "
+        "ecg_module_spec",
+        DeprecationWarning, stacklevel=2,
+    )
+    from repro import api
+
+    return api.compile(
+        ecg_module_spec(cfg, epilogue=epilogue), params, acfg
+    ).lower()
 
 
 def _pool_class_copies(out, cfg: ECGConfig, train: bool):
@@ -127,23 +160,15 @@ def ecg_apply(params, x, acfg: AnalogConfig, cfg: ECGConfig = ECGConfig(), *,
               train: bool = False, key=None):
     """x: [B, C, T] preprocessed 5-bit activations (integer-valued float).
 
-    Returns logits [B, classes].  Lowers the stack and delegates to the
-    plan executor (training re-lowers every call, which is exactly the HIL
-    contract; inference call sites should use :func:`ecg_lower` +
-    :func:`ecg_apply_plan` to pay the lowering once).
+    Returns logits [B, classes].  Compiles through the api front door and
+    runs (training re-compiles every call, which is exactly the HIL
+    contract; inference call sites should ``api.compile`` once and replay
+    ``CompiledModel.apply``).
     """
-    if acfg.mode == "digital":
-        ks = jax.random.split(key, 3) if key is not None else (None,) * 3
-        b = x.shape[0]
-        cols = _im2col(x, cfg.conv_taps, cfg.conv_stride)
-        h = L.linear_apply(params["conv"], cols, acfg, key=ks[0])
-        h = jax.nn.relu(h.reshape(b, cfg.conv_cols))
-        h = L.linear_apply(params["fc1"], h, acfg, key=ks[1])
-        h = jax.nn.relu(h)
-        out = L.linear_apply(params["fc2"], h, acfg, key=ks[2])
-        return _pool_class_copies(out, cfg, train)
-    plan = ecg_lower(params, acfg, cfg)
-    return ecg_apply_plan(plan, x, cfg, train=train, key=key)
+    from repro import api
+
+    model = api.compile(ecg_module_spec(cfg), params, acfg)
+    return model.apply(x, train=train, key=key)
 
 
 def ecg_loss(params, x, labels, acfg, cfg: ECGConfig = ECGConfig(), key=None):

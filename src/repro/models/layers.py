@@ -12,11 +12,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.analog import (
-    AnalogConfig,
-    analog_linear_apply,
-    analog_linear_init,
-)
+from repro.api.program import apply_linear
+from repro.core.analog import AnalogConfig, analog_linear_init
 from repro.core.hw import BSS2
 from repro.core.noise import NoiseConfig
 from repro.distributed.sharding import constrain
@@ -33,15 +30,30 @@ def linear_init(key, in_dim, out_dim, *, bias=False,
 
 
 def linear_apply(params, x, acfg: AnalogConfig, *, key=None):
-    return analog_linear_apply(params, x, acfg, key=key)
+    return apply_linear(params, x, acfg, key=key)
 
 
 def linear_lower(params, acfg: AnalogConfig, **kw):
-    """Lower one linear layer to a reusable single-layer AnalogPlan
-    (compile-once/run-many; see repro.exec)."""
-    from repro.exec.lower import lower as lower_plan
+    """DEPRECATED: use ``repro.api.compile(api.linear_spec(...), ...)``.
+    Kept as a bit-exact shim over the api front door (ISSUE 2)."""
+    import warnings
 
-    return lower_plan(params, acfg, **kw)
+    warnings.warn(
+        "linear_lower is deprecated; use repro.api.compile with "
+        "api.linear_spec (CompiledModel.lower() returns the AnalogPlan)",
+        DeprecationWarning, stacklevel=2,
+    )
+    from repro import api
+
+    if set(kw) - {"signed_input"}:
+        # exotic per-layer options (epilogue/shift/...) go straight to the
+        # exec substrate the api drives - same lowering, no spec wrapper
+        from repro.exec.lower import lower as lower_plan
+
+        return lower_plan(params, acfg, **kw)
+    k, n = params["w"].shape
+    spec = api.linear_spec(k, n, signed_input=kw.get("signed_input"))
+    return api.compile(spec, params, acfg).lower()
 
 
 def linear_specs(in_name: Optional[str], out_name: Optional[str],

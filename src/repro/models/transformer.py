@@ -142,6 +142,23 @@ def _prepend(specs, name="layers"):
     )
 
 
+def lm_module_spec(cfg: ArchConfig, params):
+    """Declare the LM's analog layers once for the api front door:
+    ``api.compile(lm_module_spec(cfg, params), params, run)`` bakes every
+    parameter matmul - attention QKV fused into one dispatch group per
+    (scan-stacked) layer - and ``CompiledModel.apply(batch, cache=, rng=)``
+    is :func:`lm_apply` over the pre-lowered tree.  ``params`` may be
+    abstract (only shapes are read)."""
+    from repro import api
+
+    def _apply(model, batch, *, cache=None, rng=None):
+        return lm_apply(model.lower(), batch, cfg, model.run_cfg,
+                        cache=cache, rng=rng)
+
+    return api.tree_spec(f"lm_{cfg.name}", params, param_axes=lm_specs(cfg),
+                         apply_fn=_apply)
+
+
 def lm_specs(cfg: ArchConfig):
     kinds = group_def(cfg)
     specs = {}

@@ -13,17 +13,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs.base import ArchConfig, RunConfig
 from repro.distributed import sharding as shd
 from repro.models import transformer as T
 from repro.serve.serve_step import make_serve_steps
-
-
-def shd_mesh_absent() -> bool:
-    """Pre-lowered trees carry extra ``_plan`` entries that the logical-axis
-    sharding specs don't know; restrict pre-lowering to the unsharded
-    engine (the mesh path keeps per-step lowering, CSE'd inside jit)."""
-    return shd.get_mesh() is None
 
 
 @dataclasses.dataclass
@@ -42,21 +36,32 @@ class ServeEngine:
                  greedy: bool = True, seed: int = 0,
                  prelower: bool = True):
         self.cfg, self.run = cfg, run
-        # Serving is inference against frozen weights: pre-lower every
-        # analog layer ONCE (quantized effective weights, chunk padding,
-        # offsets - repro.exec) so the jitted prefill/decode steps replay
-        # the plan instead of re-deriving it per forward.  Weight updates
-        # (not a serve concern) would require re-lowering.
-        if prelower and run.analog.mode != "digital" \
-                and shd_mesh_absent():
-            from repro.exec.lower import prelower_tree
-
-            params = prelower_tree(params, run.analog)
+        # Serving is inference against frozen weights: compile the model
+        # ONCE through the api front door (quantized effective weights,
+        # chunk padding, offsets, fused QKV dispatch groups - repro.api
+        # over repro.exec) so the jitted prefill/decode steps replay the
+        # baked plans instead of re-deriving them per forward.  Weight
+        # updates (not a serve concern) would require model.relower().
+        self.model = None
+        step_kw = {}
+        if prelower and run.analog.mode != "digital":
+            self.model = api.compile(
+                T.lm_module_spec(cfg, params), params, run
+            )
+            params = self.model.lower()
+            if shd.get_mesh() is not None:
+                # plan leaves shard by the same logical axes as the
+                # weights they were baked from (sharding.plan_specs_like)
+                specs = self.model.sharding_specs()
+                params = jax.device_put(
+                    params, shd.sharding_like(specs, params)
+                )
+                step_kw = dict(abstract_params=params, param_specs=specs)
         self.params = params
         self.batch_size = batch_size
         self.max_len = max_len
         self.greedy = greedy
-        self.prefill, self.decode = make_serve_steps(cfg, run)
+        self.prefill, self.decode = make_serve_steps(cfg, run, **step_kw)
         self.rng = jax.random.PRNGKey(seed)
 
     def _sample(self, logits):

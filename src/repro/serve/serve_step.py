@@ -37,11 +37,16 @@ def cache_sharding(cfg: ArchConfig, dtype=jnp.bfloat16):
 
 
 def make_serve_steps(cfg: ArchConfig, run: RunConfig, *,
-                     abstract_params=None, abstract_cache=None):
+                     abstract_params=None, abstract_cache=None,
+                     param_specs=None):
     """Jitted (prefill, decode) with sharded params/cache, donated cache.
 
     Shardings resolve shape-aware; when kv_heads cannot take the model axis
-    the cache shards its sequence axis instead (split-KV decode)."""
+    the cache shards its sequence axis instead (split-KV decode).
+    ``param_specs`` overrides the raw-params logical axes - the serve
+    engine passes the plan-augmented specs of its pre-lowered tree
+    (``CompiledModel.sharding_specs()``) together with the matching
+    ``abstract_params``."""
     pf = functools.partial(serve_prefill, cfg=cfg, run=run)
     dc = functools.partial(serve_decode, cfg=cfg, run=run)
     if shd.get_mesh() is None:
@@ -51,7 +56,9 @@ def make_serve_steps(cfg: ArchConfig, run: RunConfig, *,
         abstract_params = jax.eval_shape(
             lambda k: T.lm_init(k, cfg), jax.random.PRNGKey(0)
         )
-    pspec = shd.sharding_like(T.lm_specs(cfg), abstract_params)
+    if param_specs is None:
+        param_specs = T.lm_specs(cfg)
+    pspec = shd.sharding_like(param_specs, abstract_params)
     if abstract_cache is not None:
         kv_dtype = jax.tree.leaves(abstract_cache)[0].dtype
         kv_dtype = jnp.int8 if any(

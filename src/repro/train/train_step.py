@@ -63,13 +63,29 @@ def batch_specs(cfg: ArchConfig, kind: str = "train"):
 
 def train_step(state, batch, rng, *, cfg: ArchConfig, run: RunConfig,
                opt_cfg: O.AdamWConfig):
-    """One optimization step.  Pure; jit/pjit-able; state donated by caller."""
+    """One optimization step.  Pure; jit/pjit-able; state donated by caller.
+
+    The analog layers go through the api front door INSIDE the
+    differentiated function: ``api.compile`` re-bakes the plans from the
+    float masters every step (whole-block lowering, QKV fused into one
+    dispatch group), and the STE quantizers in the lowering carry the HIL
+    gradients back to the masters - compile-per-step IS the hardware-in-
+    the-loop contract (serve/eval compile once and replay instead).
+    """
+    from repro import api
+
     noise_rng = (
         None if run.analog.deterministic or run.analog.mode == "digital"
         else rng
     )
-    (loss, metrics), grads = jax.value_and_grad(T.lm_loss, has_aux=True)(
-        state["params"], batch, cfg, run, rng=noise_rng
+    spec = T.lm_module_spec(cfg, state["params"])
+
+    def loss_fn(params):
+        model = api.compile(spec, params, run)
+        return T.lm_loss(model.lower(), batch, cfg, run, rng=noise_rng)
+
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        state["params"]
     )
     if "ef" in state:
         # int8 gradient compression with error feedback: the compressed

@@ -1,0 +1,38 @@
+"""Tier-1 smoke tests for the examples: each example's main path imports
+and runs end to end (tiny workloads) through the `repro.api` front door."""
+import numpy as np
+import pytest
+
+
+def test_quickstart_main(capsys):
+    from examples import quickstart
+
+    quickstart.main([])
+    out = capsys.readouterr().out
+    assert "[1]" in out and "analog_fast" in out and "[3]" in out
+
+
+def test_serve_batch_main(capsys):
+    from examples import serve_batch
+
+    serve_batch.main(["--requests", "2", "--max-new", "2", "--batch", "2"])
+    out = capsys.readouterr().out
+    assert "served 2 requests" in out
+
+
+def test_lm_analog_train_main(capsys):
+    from examples import lm_analog_train
+
+    lm_analog_train.main(["--arch", "stablelm-3b", "--steps", "2",
+                          "--batch", "2", "--seq-len", "16"])
+    out = capsys.readouterr().out
+    assert "analog:" in out and "digital:" in out
+
+
+def test_ecg_train_main(capsys):
+    from examples import ecg_train
+
+    ecg_train.main(["--epochs", "1", "--n-train", "128", "--n-test", "48"])
+    out = capsys.readouterr().out
+    assert "analog HIL: detection" in out
+    assert "per inference:" in out
