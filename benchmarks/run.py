@@ -9,8 +9,9 @@ report.  ``PYTHONPATH=src python -m benchmarks.run [--full | --smoke]``
 | kernels_micro        | (framework) Pallas kernel checks  |
 | roofline             | §Roofline dry-run analysis        |
 
-``--smoke`` runs the CI subset (kernel checks + the exec-layer
-plan-vs-percall throughput) and writes the numbers to BENCH_smoke.json.
+``--smoke`` runs the CI subset (kernel checks + the exec-layer and
+transformer-block plan-vs-percall throughputs + the megakernel-vs-
+per-layer code-domain chain) and writes the numbers to BENCH_smoke.json.
 """
 from __future__ import annotations
 
@@ -49,10 +50,11 @@ def kernels_micro() -> None:
 
 
 def smoke() -> None:
-    """CI subset: kernel sanity + the exec-layer and transformer-block
-    plan speedups, dumped to BENCH_smoke.json.  Exits non-zero (failing
-    the bench-smoke CI job) if plan replay regresses below 1.0x vs the
-    per-call path."""
+    """CI subset: kernel sanity + the exec-layer, transformer-block and
+    megakernel plan speedups, dumped to BENCH_smoke.json.  Exits non-zero
+    (failing the bench-smoke CI job) if plan replay regresses below 1.0x
+    vs the per-call path (or the megakernel vs the layer-by-layer
+    replay)."""
     from benchmarks import throughput
 
     t0 = time.time()
@@ -67,14 +69,26 @@ def smoke() -> None:
     print(f"{tb['shape']}: dispatches={tb['dispatches']} "
           f"plan {tb['plan_speedup']:.2f}x, "
           f"lower() once = {tb['lower_us']:.0f}us")
+    mk = throughput.megakernel_vs_per_layer_throughput(iters=5)
+    print("\n== megakernel vs layer-by-layer plan replay (code domain) ==")
+    for name in ("ecg", "chain"):
+        e = mk[name]
+        print(f"{e['shape']}: dispatches "
+              f"{e['per_layer_dispatches']}->{e['megakernel_dispatches']}, "
+              f"per-layer {e['per_layer_us']:.0f}us, "
+              f"megakernel {e['megakernel_us']:.0f}us "
+              f"({e['speedup']:.2f}x)")
     out = {"plan_vs_percall": pc, "transformer_block": tb,
-           "wall_s": time.time() - t0}
+           "megakernel": mk, "wall_s": time.time() - t0}
     with open("BENCH_smoke.json", "w") as f:
         json.dump(out, f, indent=2, default=float)
     print(f"\nsmoke benchmarks done in {out['wall_s']:.0f}s "
           f"-> BENCH_smoke.json")
+    # the ECG-chain megakernel entry is recorded but not gated (small
+    # shapes are noisy on shared CI runners); the 4x512 chain entry is.
     floors = {"plan_vs_percall": pc["plan_speedup"],
-              "transformer_block": tb["plan_speedup"]}
+              "transformer_block": tb["plan_speedup"],
+              "megakernel": mk["megakernel_speedup"]}
     bad = {k: v for k, v in floors.items() if v < 1.0}
     if bad:
         print(f"FAIL: plan replay regressed below 1.0x vs per-call: {bad}")

@@ -227,6 +227,85 @@ def transformer_block_plan_throughput(iters: int = 10) -> dict:
     return out
 
 
+def megakernel_vs_per_layer_throughput(iters: int = 10) -> dict:
+    """Megakernel vs layer-by-layer plan replay (ISSUE 3).
+
+    Two code-domain chains (every inter-layer hand-off a relu_shift ADC
+    epilogue, input in the 5-bit code domain):
+
+    - ``ecg``: the paper's conv->fc1->fc2 CDNN (im2col + flatten) - the
+      single-program inference of §II-A,
+    - ``chain``: a 4-layer 512-wide stack (4 chunks/layer) where the
+      per-layer executor pays one chunk-scan per layer and the megakernel
+      replaces all of it with one fused unrolled program.
+
+    Each runs twice through the SAME lowered plan: ``megakernel=False``
+    (layer-by-layer, N dispatches) vs ``megakernel=True`` (ONE dispatch,
+    inter-layer codes never reach HBM as separate kernel round-trips).
+    Outputs are bit-exact by construction (gated in tests); the ``chain``
+    speedup is the CI-gated entry.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.analog import AnalogConfig, analog_linear_init
+    from repro.core.noise import NOISELESS
+    from repro.exec.lower import lower_stack
+    from repro.exec.run import dispatch_count, reset_dispatch_count
+    from repro.exec.run import run as run_plan
+    from repro.models import ecg as ECG
+
+    def best_of(f, x):
+        for _ in range(3):
+            f(x).block_until_ready()
+        best = float("inf")
+        for _ in range(4):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                f(x).block_until_ready()
+            best = min(best, (time.perf_counter() - t0) / iters)
+        return best * 1e6
+
+    def entry(plan, x):
+        out = {}
+        for name, mk in (("per_layer", False), ("megakernel", True)):
+            reset_dispatch_count()
+            run_plan(plan, x, megakernel=mk)
+            out[f"{name}_dispatches"] = dispatch_count()
+            out[f"{name}_us"] = best_of(
+                jax.jit(lambda c, mk=mk: run_plan(plan, c, megakernel=mk)), x
+            )
+        out["speedup"] = out["per_layer_us"] / out["megakernel_us"]
+        return out
+
+    cfg = ECG.ECGConfig()
+    params = ECG.ecg_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.round(jax.random.uniform(jax.random.PRNGKey(1),
+                                     (16, 2, 126)) * 31)
+    cols = ECG._im2col(x, cfg.conv_taps, cfg.conv_stride)
+    ecg_plan = lower_stack(
+        [params["conv"], params["fc1"], params["fc2"]], AnalogConfig(),
+        epilogues=["relu_shift", "relu_shift", "none"],
+        flatten_outs=[True, False, False], input_domain="codes",
+    )
+    depth, d, b = 4, 512, 64
+    chain_plan = lower_stack(
+        [analog_linear_init(jax.random.PRNGKey(i), d, d, noise=NOISELESS)
+         for i in range(depth)],
+        AnalogConfig(noise=NOISELESS),
+        epilogues=["relu_shift"] * (depth - 1) + ["none"],
+        input_domain="codes",
+    )
+    xc = jnp.round(jax.random.uniform(jax.random.PRNGKey(2), (b, d)) * 31)
+    out = {
+        "ecg": dict(entry(ecg_plan, cols), shape="ecg[16x2x126]"),
+        "chain": dict(entry(chain_plan, xc),
+                      shape=f"{depth}x[{b}x{d}x{d}]"),
+    }
+    out["megakernel_speedup"] = out["chain"]["speedup"]
+    return out
+
+
 def emulation_throughput() -> dict:
     """Host-side emulation speed of the faithful analog matmul (ref path)."""
     import jax

@@ -199,6 +199,7 @@ def _compile_stack(spec: ModuleSpec, params, acfg: AnalogConfig):
         signed_inputs=[l.signed_input for l in spec.layers],
         epilogues=[l.epilogue for l in spec.layers],
         flatten_outs=[l.flatten_out for l in spec.layers],
+        input_domain=spec.input_domain,
     )
 
 

@@ -64,6 +64,12 @@ class ModuleSpec:
     param_axes is the logical-axis spec pytree of the *raw* params (tree
     kind); compile() augments it with the baked plan leaves, which is what
     makes pre-lowered trees shardable (see distributed.sharding).
+    input_domain (stack kind) declares what the compiled program's INITIAL
+    input is: "codes" (already unsigned 5-bit event codes - quantization
+    is skipped) or "float" (quantized on entry); None keeps the legacy
+    inference from the first layer's epilogue.  It is baked into the
+    lowered AnalogPlan, so the executor never guesses from layer 0's
+    *output* hand-off (which mis-classifies mixed chains).
     """
 
     name: str
@@ -71,6 +77,7 @@ class ModuleSpec:
     kind: str = STACK
     apply_fn: Optional[Callable] = None
     param_axes: Any = None
+    input_domain: Optional[str] = None
 
     def layer(self, name: str) -> LayerSpec:
         for l in self.layers:

@@ -80,9 +80,13 @@ class CompiledModel:
 
     # ------------------------------------------------------------- execute
     def apply(self, *args, **kw):
-        """Run the compiled program.  Stacks take ``(x, *, key=None)``;
-        tree specs forward to the host program declared by the spec
-        (``spec.apply_fn(model, *args, **kw)``)."""
+        """Run the compiled program.  Stacks take
+        ``(x, *, key=None, megakernel="auto")`` - ``megakernel`` selects
+        the whole-plan single-dispatch Pallas route for code-domain
+        chains ("auto" uses it when eligible, True requires it, False
+        forces the layer-by-layer replay); tree specs forward to the host
+        program declared by the spec (``spec.apply_fn(model, *args,
+        **kw)``)."""
         if self.spec.apply_fn is not None:
             return self.spec.apply_fn(self, *args, **kw)
         if self.spec.kind != "stack":
@@ -91,12 +95,18 @@ class CompiledModel:
             )
         return self.run_stack(*args, **kw)
 
-    def run_stack(self, x: jax.Array, *, key: Optional[jax.Array] = None
-                  ) -> jax.Array:
-        """Execute the layer chain (plan replay, or the digital reference
-        path with the same ReLU/flatten inter-layer glue)."""
+    def run_stack(self, x: jax.Array, *, key: Optional[jax.Array] = None,
+                  megakernel="auto") -> jax.Array:
+        """Execute the layer chain (plan replay - megakernel-routed when
+        eligible - or the digital reference path with the same
+        ReLU/flatten inter-layer glue)."""
         if self.lowered is not None:
-            return run_plan(self.lowered, x, key=key)
+            return run_plan(self.lowered, x, key=key, megakernel=megakernel)
+        if megakernel is True:
+            raise ValueError(
+                "megakernel=True, but: digital mode compiles no analog "
+                "plan to megakernel"
+            )
         h = x
         n = len(self.spec.layers)
         for i, l in enumerate(self.spec.layers):
@@ -108,7 +118,9 @@ class CompiledModel:
             if i < n - 1:
                 h = jax.nn.relu(h)
             if l.flatten_out:
-                h = h.reshape(h.shape[0], -1)
+                # merge the position axis into features, preserving any
+                # leading batch dims (same semantics as the plan executor)
+                h = h.reshape(h.shape[:-2] + (-1,))
         return h
 
     # --------------------------------------------------------------- plans

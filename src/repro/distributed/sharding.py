@@ -271,14 +271,22 @@ def layer_plan_specs(lp, w_spec: Sequence[Optional[str]]):
 
 def analog_plan_specs(plan, layer_axes: Sequence[Sequence[Optional[str]]]):
     """Spec pytree for a whole AnalogPlan: ``layer_axes[i]`` is the
-    (in_name, out_name) pair of layer i."""
+    (in_name, out_name) pair of layer i.  The megakernel packing (when
+    baked) is replicated: its row-concatenated operands interleave layers,
+    so no single logical axis describes them - they are small by
+    eligibility (whole-chain VMEM residency)."""
     import dataclasses
 
     layers = tuple(
         layer_plan_specs(lp, tuple(ax))
         for lp, ax in zip(plan.layers, layer_axes)
     )
-    return dataclasses.replace(plan, layers=layers)
+    mega = plan.mega
+    if mega is not None:
+        mega = dataclasses.replace(
+            mega, w_cat=(None, None), gain=(None, None), off=(None, None)
+        )
+    return dataclasses.replace(plan, layers=layers, mega=mega)
 
 
 def plan_specs_like(spec_tree, lowered_tree):

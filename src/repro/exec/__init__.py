@@ -14,17 +14,23 @@ from repro.exec.lower import (  # noqa: F401
     lower_fused,
     lower_layer,
     lower_stack,
+    megakernel_ineligible_reason,
+    pack_megakernel,
     prelower_tree,
 )
 from repro.exec.plan import (  # noqa: F401
     EPILOGUE_NONE,
     EPILOGUE_RELU_SHIFT,
+    INPUT_CODES,
+    INPUT_FLOAT,
     AnalogPlan,
     LayerPlan,
+    MegakernelPack,
     default_shift,
 )
 from repro.exec.run import (  # noqa: F401
     dispatch_count,
+    megakernel_fallback_reason,
     reset_dispatch_count,
     run,
     run_layer,

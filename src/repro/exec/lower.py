@@ -20,6 +20,7 @@ from __future__ import annotations
 
 from typing import Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import noise as noise_lib
@@ -28,8 +29,11 @@ from repro.core.analog import AnalogConfig, Params
 from repro.exec.plan import (
     EPILOGUE_NONE,
     EPILOGUE_RELU_SHIFT,
+    INPUT_CODES,
+    INPUT_FLOAT,
     AnalogPlan,
     LayerPlan,
+    MegakernelPack,
     default_shift,
 )
 
@@ -91,6 +95,23 @@ def lower_layer(
     )
 
 
+def _resolve_input_domain(
+    layers: Sequence[LayerPlan], input_domain: Optional[str]
+) -> str:
+    """Bake the plan's input domain.  When the caller does not state it,
+    fall back to the legacy inference (first layer's own hand-off format)
+    - explicit declaration is what fixes the mixed-plan case where layer 0
+    emits relu_shift codes but consumes float features."""
+    if input_domain is not None:
+        if input_domain not in (INPUT_CODES, INPUT_FLOAT):
+            raise ValueError(f"unknown input_domain {input_domain!r}")
+        return input_domain
+    first_codes = (
+        len(layers) > 0 and layers[0].epilogue == EPILOGUE_RELU_SHIFT
+    )
+    return INPUT_CODES if first_codes else INPUT_FLOAT
+
+
 def lower_stack(
     layer_params: Sequence[Params],
     cfg: AnalogConfig,
@@ -98,12 +119,17 @@ def lower_stack(
     signed_inputs: Optional[Sequence[Optional[str]]] = None,
     epilogues: Optional[Sequence[str]] = None,
     flatten_outs: Optional[Sequence[bool]] = None,
+    input_domain: Optional[str] = None,
 ) -> AnalogPlan:
     """Lower an ordered stack of layers into one :class:`AnalogPlan`.
 
     ``epilogues[i]`` is the ADC epilogue BETWEEN layer i and i+1; the last
     layer's epilogue is forced to "none" (final outputs dequantize to
-    float logits).
+    float logits).  ``input_domain`` declares what the plan's INITIAL
+    input is ("codes" | "float"); None keeps the legacy inference from
+    layer 0's epilogue.  Code-domain chains additionally get a megakernel
+    packing baked (:func:`pack_megakernel`) so the executor can run the
+    whole stack as one Pallas kernel.
     """
     n = len(layer_params)
     signed_inputs = signed_inputs or [None] * n
@@ -118,14 +144,27 @@ def lower_stack(
         for p, s, e, f in zip(layer_params, signed_inputs, epilogues,
                               flatten_outs)
     )
-    return AnalogPlan(layers=layers, cfg=cfg)
+    plan = AnalogPlan(
+        layers=layers, cfg=cfg,
+        input_domain=_resolve_input_domain(layers, input_domain),
+    )
+    mega = pack_megakernel(plan)
+    if mega is not None:
+        plan = AnalogPlan(layers=layers, cfg=cfg, mega=mega,
+                          input_domain=plan.input_domain)
+    return plan
 
 
-def lower(params: Params, cfg: AnalogConfig, **kw) -> AnalogPlan:
+def lower(params: Params, cfg: AnalogConfig, *,
+          input_domain: Optional[str] = None, **kw) -> AnalogPlan:
     """``lower(params, AnalogConfig) -> AnalogPlan`` for a single layer's
     parameter dict (the ``analog_linear_apply`` contract) - the one-layer
     specialization of :func:`lower_stack`."""
-    return AnalogPlan(layers=(lower_layer(params, cfg, **kw),), cfg=cfg)
+    layers = (lower_layer(params, cfg, **kw),)
+    return AnalogPlan(
+        layers=layers, cfg=cfg,
+        input_domain=_resolve_input_domain(layers, input_domain),
+    )
 
 
 def lower_fused(
@@ -156,6 +195,20 @@ def lower_fused(
             raise ValueError(
                 "fused layers must share the input dim and chunk geometry: "
                 f"{[(p.k, p.chunk_rows) for p in plans]}"
+            )
+    if cfg.act_calib == "static":
+        # the fused plan bakes ONE a_scale for the whole group; under
+        # static calibration differing per-layer scales would silently
+        # quantize all-but-the-first layer's input with the wrong LSB
+        try:
+            scales = [float(jax.numpy.asarray(lp.a_scale)) for lp in plans]
+        except jax.errors.ConcretizationTypeError:
+            scales = None          # traced lowering: cannot verify here
+        if scales is not None and any(s != scales[0] for s in scales):
+            raise ValueError(
+                "lower_fused with act_calib='static' requires identical "
+                f"a_scale across the fused layers, got {scales}; lower "
+                "them per-layer or recalibrate to a shared scale"
             )
     n_tot = sum(lp.n for lp in plans)
     cat = lambda xs: jnp.concatenate(xs, axis=-1)
@@ -196,6 +249,120 @@ def lower_fused(
         signed_input=plans[0].signed_input,
         epilogue=EPILOGUE_NONE,
         shift=0,
+    )
+
+
+def megakernel_ineligible_reason(plan: AnalogPlan) -> Optional[str]:
+    """Structural megakernel eligibility of a lowered plan; returns None
+    when eligible, else a human-readable reason (the fallback matrix the
+    README documents).  Run-time conditions (deterministic replay, batch
+    shape) are checked in :func:`repro.exec.run.run`."""
+    layers = plan.layers
+    if len(layers) < 2:
+        return "megakernel needs a stack of >= 2 layers"
+    if plan.input_domain != INPUT_CODES:
+        return "plan input is not in the code domain"
+    for i, lp in enumerate(layers):
+        if getattr(lp.w_eff, "ndim", 2) != 2:
+            return "scan-stacked (vmapped) layer plans are not packable"
+        if lp.chunk_rows != layers[0].chunk_rows:
+            return "layers disagree on chunk geometry"
+        if i < len(layers) - 1:
+            if lp.epilogue != EPILOGUE_RELU_SHIFT:
+                return (
+                    f"layer {i} hands off floats (epilogue "
+                    f"{lp.epilogue!r}); the chain must stay in the code "
+                    "domain end to end"
+                )
+            nxt = layers[i + 1]
+            if lp.flatten_out:
+                if nxt.k % lp.n:
+                    return (
+                        f"flatten at layer {i}: next k={nxt.k} is not a "
+                        f"multiple of n={lp.n}"
+                    )
+            elif nxt.k != lp.n:
+                return (
+                    f"layer {i} width {lp.n} does not feed layer "
+                    f"{i + 1} width {nxt.k}"
+                )
+        elif lp.epilogue != EPILOGUE_NONE:
+            return "last layer must dequantize (epilogue 'none')"
+    return None
+
+
+def pack_megakernel(plan: AnalogPlan) -> Optional[MegakernelPack]:
+    """Pack a code-domain :class:`AnalogPlan` into the stacked operands +
+    static schedule the whole-plan Pallas megakernel consumes
+    (:func:`repro.kernels.analog_plan.analog_plan_pallas`), or None when
+    the plan is structurally ineligible (mixed/float/stacked chains keep
+    the layer-by-layer executor).
+
+    Per-layer ``w_eff`` / ``gain`` / ``chunk_offset`` tables are column-
+    padded to one common lane width and row-concatenated - column padding
+    is inert by construction (zero weights x zero gain x zero offset
+    accumulate to zero ADC codes), and each layer's zero output columns
+    double as the next layer's chunk padding, exactly like the executor's
+    ``_pad_codes``.
+    """
+    from repro.kernels.analog_plan import MegaLayerMeta
+
+    if megakernel_ineligible_reason(plan) is not None:
+        return None
+    layers = plan.layers
+    last = len(layers) - 1
+
+    # flatten factor INTO the next layer (the im2col position merge) and
+    # the resulting rows-per-batch-row multiplier at each layer's input
+    factors = []
+    for i, lp in enumerate(layers):
+        if i < last and lp.flatten_out:
+            factors.append(layers[i + 1].k // lp.n)
+        else:
+            factors.append(1)
+    m_mults = [1] * len(layers)
+    for i in range(last - 1, -1, -1):
+        m_mults[i] = m_mults[i + 1] * factors[i]
+
+    lane = 128
+    n_max = max(
+        max(lp.n for lp in layers),
+        max(lp.w_eff.shape[0] for lp in layers[1:]),
+    )
+    n_max = -(-n_max // lane) * lane
+
+    schedule, w_blocks, gain_rows, off_blocks = [], [], [], []
+    row0 = c0 = 0
+    for i, lp in enumerate(layers):
+        k_pad = lp.w_eff.shape[0]
+        n_chunks = lp.n_chunks
+        w_blocks.append(jnp.pad(lp.w_eff, ((0, 0), (0, n_max - lp.n))))
+        gain_rows.append(jnp.pad(
+            jnp.broadcast_to(
+                jnp.asarray(lp.gain, jnp.float32), (lp.n,)
+            ),
+            (0, n_max - lp.n),
+        ))
+        off = (
+            lp.chunk_offset if lp.chunk_offset is not None
+            else jnp.zeros((n_chunks, lp.n), jnp.float32)
+        )
+        off_blocks.append(jnp.pad(off, ((0, 0), (0, n_max - lp.n))))
+        schedule.append(MegaLayerMeta(
+            row0=row0, c0=c0, k=lp.k, k_pad=k_pad, n=lp.n,
+            n_chunks=n_chunks, shift=lp.shift,
+            relu_shift=lp.epilogue == EPILOGUE_RELU_SHIFT,
+            flatten=factors[i], m_mult=m_mults[i],
+        ))
+        row0 += k_pad
+        c0 += n_chunks
+    return MegakernelPack(
+        w_cat=jnp.concatenate(w_blocks, axis=0),
+        gain=jnp.stack(gain_rows, axis=0),
+        off=jnp.concatenate(off_blocks, axis=0),
+        schedule=tuple(schedule),
+        n_max=n_max,
+        chunk_rows=layers[0].chunk_rows,
     )
 
 

@@ -41,6 +41,15 @@ from repro.core.hw import BSS2
 EPILOGUE_NONE = "none"
 EPILOGUE_RELU_SHIFT = "relu_shift"
 
+# Input-domain tags (static).  Baked into AnalogPlan at lower time so the
+# executor never has to GUESS whether the initial activations are already
+# unsigned 5-bit event codes: "codes" skips activation quantization,
+# "float" quantizes like any other float activation.  (The legacy default
+# inferred this from layer 0's *output* epilogue, which mis-classifies a
+# mixed plan whose first layer emits relu_shift but consumes floats.)
+INPUT_CODES = "codes"
+INPUT_FLOAT = "float"
+
 
 def default_shift(n_chunks: int) -> int:
     """Right-shift mapping the accumulated non-negative ADC range
@@ -115,18 +124,97 @@ jax.tree_util.register_dataclass(
 
 
 @dataclasses.dataclass(frozen=True)
+class MegakernelPack:
+    """Kernel-ready packing of a code-domain AnalogPlan for the whole-plan
+    Pallas megakernel (built once by :func:`repro.exec.lower.pack_megakernel`).
+
+    Array fields (pytree leaves):
+      w_cat:    [sum(k_pad), n_max] per-layer effective weights, columns
+                zero-padded to the common lane width, row-concatenated.
+      gain:     [L, n_max] per-layer analog gains (broadcast + padded).
+      off:      [sum(n_chunks), n_max] per-layer chunk offsets (zeros where
+                a layer has none), chunk-concatenated.
+
+    Static fields:
+      schedule:   tuple of :class:`repro.kernels.analog_plan.MegaLayerMeta`
+                  (row offsets, chunk geometry, shifts, flatten factors).
+      n_max:      packed lane width (max layer output, 128-aligned).
+      chunk_rows: rows per analog chunk (uniform across the chain).
+    """
+
+    w_cat: jax.Array
+    gain: jax.Array
+    off: jax.Array
+    schedule: tuple
+    n_max: int
+    chunk_rows: int
+
+
+jax.tree_util.register_dataclass(
+    MegakernelPack,
+    data_fields=["w_cat", "gain", "off"],
+    meta_fields=["schedule", "n_max", "chunk_rows"],
+)
+
+
+@dataclasses.dataclass(frozen=True)
 class AnalogPlan:
     """A lowered stack of analog layers plus the execution config it was
     lowered for.  ``cfg`` is static: plans lowered with different modes
-    (faithful/fast, pallas on/off, ...) compile to different programs."""
+    (faithful/fast, pallas on/off, ...) compile to different programs.
+
+    ``input_domain`` ("codes" | "float" | None) states what the plan's
+    INITIAL input is - baked at lower time; None (manually-built plans)
+    falls back to the legacy first-layer-epilogue inference in ``run``.
+    ``mega`` is the optional megakernel packing: present iff the plan is a
+    pure code-domain chain (see :func:`repro.exec.lower.pack_megakernel`),
+    consumed by the whole-plan Pallas kernel in ``run``.
+    """
 
     layers: Tuple[LayerPlan, ...]
     cfg: AnalogConfig
+    mega: Optional[MegakernelPack] = None
+    input_domain: Optional[str] = None
 
     def __len__(self) -> int:
         return len(self.layers)
 
+    @property
+    def expects_codes(self) -> bool:
+        """Does the plan's first layer consume 5-bit codes?  Explicit
+        ``input_domain`` when baked, else the legacy inference (first
+        layer's own hand-off format)."""
+        if self.input_domain is not None:
+            return self.input_domain == INPUT_CODES
+        return (
+            len(self.layers) > 0
+            and self.layers[0].epilogue == EPILOGUE_RELU_SHIFT
+        )
+
+    @property
+    def expected_dispatches(self) -> int:
+        """Analog dispatches ONE deterministic layer-by-layer replay of
+        this plan issues (``key=None``), derived from static metadata
+        alone.  This is the ground truth dispatch-count tests assert
+        against: the ``ANALOG_DISPATCHES`` counter only bumps at trace
+        time, so counting a cached-jit replay observes 0 and a counter-
+        only assertion can pass vacuously.  (The megakernel route issues
+        exactly 1 dispatch instead.)"""
+        is_codes = self.expects_codes
+        n = 0
+        last = len(self.layers) - 1
+        for i, lp in enumerate(self.layers):
+            signed = "none" if is_codes else lp.signed_input
+            n += 2 if (signed == "split" and not self.cfg.fused_split) else 1
+            if lp.epilogue == EPILOGUE_NONE and i < last:
+                is_codes = False
+            else:
+                is_codes = lp.epilogue == EPILOGUE_RELU_SHIFT
+        return n
+
 
 jax.tree_util.register_dataclass(
-    AnalogPlan, data_fields=["layers"], meta_fields=["cfg"]
+    AnalogPlan,
+    data_fields=["layers", "mega"],
+    meta_fields=["cfg", "input_domain"],
 )

@@ -15,7 +15,13 @@ Responsibilities left at run time (everything else was baked by
   ``cfg.use_pallas`` and ``cfg.fused_epilogue`` it is emitted INSIDE the
   Pallas kernel, so a stacked plan (the ECG conv->fc1->fc2 chain) runs as
   one jitted analog program with no float glue between layers,
-- temporal readout noise keys (mock-mode training).
+- temporal readout noise keys (mock-mode training),
+- megakernel routing: a pure code-domain plan (packed at lower time, see
+  ``exec.lower.pack_megakernel``) replays as ONE dispatch - the whole
+  chain in a single ``pallas_call`` with VMEM-resident inter-layer codes
+  (``cfg.use_pallas``), or as one fused jnp chain otherwise.  Mixed,
+  noisy and float-input plans fall back to the layer-by-layer path;
+  ``run(..., megakernel=True)`` raises instead of silently falling back.
 
 Dispatch accounting: every analog pass issued by the executor bumps
 :data:`ANALOG_DISPATCHES` at trace time - tests and benchmarks use
@@ -185,32 +191,129 @@ def _run_layer_fused_infer(
     return y.reshape(batch_shape + (lp.n,))
 
 
+def _megakernel_batch_shape(plan: AnalogPlan, x: jax.Array):
+    """Resolve the megakernel's output batch shape from ``x``'s leading
+    dims, or return a reason string when the shapes cannot feed the packed
+    schedule.  EVERY flatten_out layer consumes the then-trailing batch
+    dim (even a size-1 position axis: the per-layer replay merges it into
+    the feature axis, so the megakernel's output shape must too)."""
+    lead = list(x.shape[:-1])
+    for lp, meta in zip(plan.layers[:-1], plan.mega.schedule[:-1]):
+        if not lp.flatten_out:
+            continue
+        if not lead or lead[-1] != meta.flatten:
+            return (
+                f"flatten layer expects a trailing batch dim of "
+                f"{meta.flatten} positions, got input shape {x.shape}"
+            )
+        lead.pop()
+    return tuple(lead)
+
+
+def _run_megakernel(
+    plan: AnalogPlan, x: jax.Array, lead: tuple
+) -> jax.Array:
+    """Replay a packed code-domain plan as ONE analog dispatch: the whole
+    chain inside a single ``pallas_call`` (or one fused jnp chain on the
+    non-Pallas path), inter-layer 5-bit codes VMEM-resident.  Bit-exact
+    vs the layer-by-layer replay (same per-chunk ADC arithmetic, same
+    floor-shift epilogue, same dequantization expression - tested)."""
+    from repro.kernels import ops as kernel_ops
+
+    cfg, mega = plan.cfg, plan.mega
+    lp = plan.layers[-1]
+    x2 = x.astype(jnp.float32).reshape(-1, x.shape[-1])
+    x2 = _pad_codes(x2, plan.layers[0].w_eff.shape[0])
+    _count()
+    y_int = kernel_ops.analog_plan_codes(
+        x2, mega.w_cat, mega.gain, mega.off,
+        schedule=mega.schedule, chunk_rows=mega.chunk_rows,
+        faithful=cfg.mode != "analog_fast", use_pallas=cfg.use_pallas,
+    )
+    y_int = y_int.reshape(lead + (lp.n,))
+    # identical dequantization to run_layer's epilogue == "none" hand-off
+    # (codes in, so a_scale == 1)
+    a_scale = jnp.asarray(1.0, jnp.float32)
+    y = y_int * (a_scale * lp.w_scale.reshape(-1) / lp.gain)
+    if lp.bias is not None:
+        y = y + lp.bias
+    if lp.flatten_out:
+        y = y.reshape(y.shape[:-2] + (-1,))
+    return y
+
+
+def _megakernel_route(
+    plan: AnalogPlan,
+    x: jax.Array,
+    cfg: AnalogConfig,
+    key: Optional[jax.Array],
+    x_is_codes: bool,
+):
+    """Resolve the megakernel route for one ``run`` call: the output
+    batch-shape tuple when it can be taken, else a reason string.
+    Structural ineligibility is decided at lower time (no ``mega``
+    packing baked), the rest here - noisy replay and batch-shape
+    mismatches keep the layer-by-layer path."""
+    if plan.mega is None:
+        from repro.exec.lower import megakernel_ineligible_reason
+
+        return megakernel_ineligible_reason(plan) or "plan was not packed"
+    if not x_is_codes:
+        return "input is float (megakernel chains start in the code domain)"
+    if key is not None and not cfg.deterministic:
+        return "noisy replay (readout-noise keys) is layer-by-layer"
+    return _megakernel_batch_shape(plan, x)
+
+
+def megakernel_fallback_reason(
+    plan: AnalogPlan,
+    x: jax.Array,
+    cfg: AnalogConfig,
+    key: Optional[jax.Array],
+    x_is_codes: bool,
+) -> Optional[str]:
+    """Why a ``run`` call cannot take the megakernel route (None = it
+    can)."""
+    route = _megakernel_route(plan, x, cfg, key, x_is_codes)
+    return route if isinstance(route, str) else None
+
+
 def run(
     plan: AnalogPlan,
     x: jax.Array,
     *,
     key: Optional[jax.Array] = None,
     x_is_codes: Optional[bool] = None,
+    megakernel="auto",
 ) -> jax.Array:
     """Execute a whole lowered stack: one jitted analog program.
 
     Layers whose predecessor emitted a ``relu_shift`` epilogue consume
     5-bit codes directly (no dequant/requant glue); ``x_is_codes`` states
-    whether the initial input already is codes (default: yes iff the first
-    layer's own hand-off format is the code domain, i.e. the plan was
-    lowered with ADC epilogues).
+    whether the initial input already is codes (default: the plan's baked
+    ``input_domain``; plans built without one fall back to the legacy
+    first-layer-epilogue inference).
+
+    ``megakernel`` selects the whole-plan single-dispatch route for
+    code-domain chains: ``"auto"`` (default) uses it whenever the plan is
+    eligible, ``False`` forces the layer-by-layer replay, ``True``
+    requires it (raises ``ValueError`` with the fallback reason when the
+    plan or call cannot take it).
     """
     cfg = plan.cfg
     n = len(plan.layers)
-    ks = list(jax.random.split(key, n)) if key is not None else [None] * n
     if x_is_codes is None:
-        # the first layer consumes codes iff IT hands off in the code
-        # domain (a plan lowered with ADC epilogues is a code-domain
-        # chain end to end); mixed plans starting with a float layer
-        # quantize their input like any other float activation.
-        x_is_codes = (
-            n > 0 and plan.layers[0].epilogue == EPILOGUE_RELU_SHIFT
-        )
+        x_is_codes = plan.expects_codes
+    if megakernel is True or megakernel == "auto":
+        route = _megakernel_route(plan, x, cfg, key, x_is_codes)
+        if not isinstance(route, str):
+            return _run_megakernel(plan, x, route)
+        if megakernel is True:
+            raise ValueError(f"megakernel=True, but: {route}")
+    elif megakernel is not False:
+        raise ValueError(f"megakernel must be 'auto'|True|False, "
+                         f"got {megakernel!r}")
+    ks = list(jax.random.split(key, n)) if key is not None else [None] * n
     is_codes = x_is_codes
     h = x
     for i, (lp, k) in enumerate(zip(plan.layers, ks)):
@@ -231,5 +334,9 @@ def run(
         else:
             is_codes = lp.epilogue == EPILOGUE_RELU_SHIFT
         if lp.flatten_out:
-            h = h.reshape(h.shape[0], -1)
+            # flatten only the layer's trailing output dims: merge the
+            # position axis into the feature axis, PRESERVING any leading
+            # batch dims (the old `h.reshape(h.shape[0], -1)` mangled
+            # unbatched [K] inputs and multi-dim batches)
+            h = h.reshape(h.shape[:-2] + (-1,))
     return h

@@ -1,0 +1,214 @@
+"""Whole-plan Pallas megakernel: one ``pallas_call`` per AnalogPlan.
+
+The paper's headline figure - 276 us / 192 uJ per ECG sample (§IV) - comes
+from the conv->fc1->fc2 CDNN running as ONE uninterrupted analog program on
+the ASIC: inter-layer 5-bit activation codes are written by the SIMD CPU
+straight back into the synapse drivers and never leave the chip (§II-A).
+The per-layer executor in :mod:`repro.exec.run` already fuses the ADC
+epilogue into each layer's kernel, but still issues one ``pallas_call``
+per layer, bouncing the inter-layer codes through HBM.  This kernel closes
+that gap: it executes an entire *code-domain* layer chain - every layer fed
+unsigned 5-bit codes, every inter-layer hand-off a fused ReLU+right-shift
+requantization - inside one kernel launch.
+
+TPU mapping:
+- the grid runs over blocks of the *batch* only (rows are independent end
+  to end, so each grid step owns its slice of every layer); weights, gains
+  and chunk offsets are packed once at lower time
+  (:func:`repro.exec.lower.pack_megakernel`) into row-concatenated VMEM
+  blocks whose index maps are constant - Mosaic keeps them resident across
+  grid steps instead of re-streaming per layer,
+- inter-layer codes round-trip through a VMEM scratch buffer (the software
+  mirror of the on-chip activation path): layer i's requantized 5-bit codes
+  are stored to scratch and read back as layer i+1's event codes without
+  ever touching HBM,
+- ``flatten_out`` layers (the ECG conv->fc1 im2col hand-off) merge their
+  position axis into the next layer's contraction axis by a static reshape
+  of the code block - row-major layout makes the flatten a relabeling of
+  the same VMEM values, exactly like the on-chip activation memory.
+
+The static layer schedule (:class:`MegaLayerMeta` tuple) is baked at lower
+time; the kernel body unrolls over it, so per-layer chunk counts, shifts
+and flatten factors are compile-time constants.
+
+Validated bit-exactly (fp32, interpret mode) against the layer-by-layer
+plan replay - see tests/test_kernels.py and tests/test_exec.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.hw import BSS2
+from repro.kernels._compat import CompilerParams
+
+
+class MegaLayerMeta(NamedTuple):
+    """Static schedule entry for one layer of a packed megakernel chain.
+
+    All fields are Python ints/bools (hashable: the schedule tuple is a
+    jit-static argument and pytree metadata).
+    """
+
+    row0: int        # first row of this layer's weights in w_cat
+    c0: int          # first row of this layer's offsets in off_cat
+    k: int           # logical input width (pre chunk padding)
+    k_pad: int       # padded input width (w_eff rows)
+    n: int           # output width
+    n_chunks: int    # k_pad // chunk_rows
+    shift: int       # relu_shift right-shift amount (inter-layer layers)
+    relu_shift: bool  # True: hand 5-bit codes to the next layer in-kernel
+    flatten: int     # cols-merge factor into the next layer (1 = none)
+    m_mult: int      # input rows per final batch row at this layer
+
+
+def _adc_accumulate(h, w_l, gain, off_rows, meta: MegaLayerMeta, *,
+                    chunk_rows: int, faithful: bool, compute_dtype):
+    """Chunked saturating analog VMM for one scheduled layer (in-kernel):
+    per 128-row chunk, MXU dot + gain + fixed-pattern offset, 8-bit ADC
+    round/clip (faithful) and digital accumulation - the same arithmetic
+    as :func:`repro.kernels.analog_mvm._kernel`, unrolled over the static
+    chunk count."""
+    acc = jnp.zeros((h.shape[0], w_l.shape[1]), jnp.float32)
+    for c in range(meta.n_chunks):
+        a_c = h[:, c * chunk_rows:(c + 1) * chunk_rows].astype(compute_dtype)
+        w_c = w_l[c * chunk_rows:(c + 1) * chunk_rows, :].astype(compute_dtype)
+        v = jnp.dot(a_c, w_c, preferred_element_type=jnp.float32)
+        v = v * gain + off_rows[c]
+        if faithful:
+            v = jnp.clip(jnp.round(v), float(BSS2.adc_min),
+                         float(BSS2.adc_max))
+        acc = acc + v
+    if not faithful:
+        lo = float(BSS2.adc_min) * meta.n_chunks
+        hi = float(BSS2.adc_max) * meta.n_chunks
+        acc = jnp.clip(jnp.round(acc), lo, hi)
+    return acc
+
+
+def _plan_kernel(x_ref, w_ref, gain_ref, off_ref, o_ref, h_ref, *,
+                 schedule: Tuple[MegaLayerMeta, ...], chunk_rows: int,
+                 faithful: bool, n_max: int, block_b: int, compute_dtype):
+    w_all = w_ref[...]
+    h = x_ref[...].astype(jnp.float32)          # [block_b * m_mult0, k0_pad]
+    for li, meta in enumerate(schedule):
+        rows = block_b * meta.m_mult
+        w_l = w_all[meta.row0:meta.row0 + meta.k_pad, :]
+        off_rows = [off_ref[meta.c0 + c, :] for c in range(meta.n_chunks)]
+        acc = _adc_accumulate(
+            h, w_l, gain_ref[li, :], off_rows, meta,
+            chunk_rows=chunk_rows, faithful=faithful,
+            compute_dtype=compute_dtype,
+        )
+        if li == len(schedule) - 1:
+            # final layer: raw accumulated ADC codes leave the kernel
+            # (dequantization to float logits happens outside, like the
+            # per-layer executor's epilogue == "none" hand-off)
+            o_ref[...] = acc
+            return
+        # inter-layer ADC epilogue (paper §II-A): ReLU at the readout +
+        # right-shift requantization onto the 5-bit code range
+        codes = jnp.maximum(acc, 0.0)
+        codes = jnp.floor(codes / float(1 << meta.shift))
+        codes = jnp.clip(codes, 0.0, float(BSS2.a_max))
+        codes = codes[:, :meta.n]
+        if meta.flatten > 1:
+            # im2col flatten: merge the position rows into the next
+            # layer's contraction axis (row-major relabeling)
+            codes = codes.reshape(rows // meta.flatten,
+                                  meta.flatten * meta.n)
+        width = codes.shape[1]
+        if width < n_max:
+            # zero padding doubles as the next layer's chunk padding
+            codes = jnp.concatenate(
+                [codes,
+                 jnp.zeros((codes.shape[0], n_max - width), jnp.float32)],
+                axis=1,
+            )
+        # the 5-bit codes round-trip through VMEM scratch - the software
+        # mirror of the on-chip activation memory: they never leave the
+        # core between layers
+        h_ref[0:codes.shape[0], :] = codes
+        h = h_ref[0:codes.shape[0], :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "schedule", "chunk_rows", "faithful", "block_b", "interpret",
+        "compute_dtype",
+    ),
+)
+def analog_plan_pallas(
+    x_codes: jax.Array,              # [B * m_mult0, k0_pad] 5-bit codes
+    w_cat: jax.Array,                # [sum(k_pad), n_max] packed weights
+    gain_all: jax.Array,             # [L, n_max] per-layer gains
+    off_cat: jax.Array,              # [sum(n_chunks), n_max] offsets
+    *,
+    schedule: Tuple[MegaLayerMeta, ...],
+    chunk_rows: int = BSS2.signed_rows,
+    faithful: bool = True,
+    block_b: int = 8,
+    interpret: bool = False,
+    compute_dtype=jnp.float32,
+) -> jax.Array:
+    """Execute a packed code-domain AnalogPlan in ONE kernel launch.
+
+    Returns the final layer's raw accumulated ADC codes
+    ``[B * m_mult_last, n_last]`` (integer-valued float); the caller
+    dequantizes exactly like the per-layer executor.  fp32 is bit-exact
+    against the layer-by-layer replay (tested); ``bfloat16`` enables the
+    full-rate MXU path on TPU with the same sub-LSB caveat as
+    :func:`repro.kernels.analog_mvm.analog_mvm_pallas`.
+    """
+    assert len(schedule) >= 1
+    m0, m_last = schedule[0].m_mult, schedule[-1].m_mult
+    n_max = w_cat.shape[1]
+    assert x_codes.shape[0] % m0 == 0, (x_codes.shape, m0)
+    b = x_codes.shape[0] // m0
+
+    pb = (-b) % block_b
+    if pb:
+        # zero-code pad rows stay in their own rows end to end (the chain
+        # only contracts over K) and are sliced off below
+        x_codes = jnp.pad(x_codes, ((0, pb * m0), (0, 0)))
+    b_pad = b + pb
+
+    scratch_rows = block_b * max(
+        (m.m_mult for m in schedule[1:]), default=1
+    )
+    grid = (b_pad // block_b,)
+    out = pl.pallas_call(
+        functools.partial(
+            _plan_kernel, schedule=schedule, chunk_rows=chunk_rows,
+            faithful=faithful, n_max=n_max, block_b=block_b,
+            compute_dtype=compute_dtype,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b * m0, x_codes.shape[1]),
+                         lambda i: (i, 0)),
+            # constant index maps: packed operands stay VMEM-resident
+            # across batch blocks instead of re-streaming per layer
+            pl.BlockSpec(w_cat.shape, lambda i: (0, 0)),
+            pl.BlockSpec(gain_all.shape, lambda i: (0, 0)),
+            pl.BlockSpec(off_cat.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b * m_last, n_max), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_pad * m_last, n_max), jnp.float32),
+        scratch_shapes=[
+            # inter-layer 5-bit codes live HERE between layers
+            pltpu.VMEM((scratch_rows, n_max), jnp.float32)
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)
+        ),
+        interpret=interpret,
+    )(x_codes.astype(jnp.float32), w_cat.astype(jnp.float32), gain_all,
+      off_cat)
+    return out[: b * m_last, : schedule[-1].n]

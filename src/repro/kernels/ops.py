@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.core.hw import BSS2
 from repro.kernels import ref as ref_lib
 from repro.kernels.analog_mvm import analog_mvm_pallas, analog_mvm_split_pallas
+from repro.kernels.analog_plan import analog_plan_pallas
 from repro.kernels.preproc import maxmin_pool_pallas
 
 
@@ -187,6 +188,81 @@ def analog_mvm_infer(
         )
         y = y2[:m] - y2[m:]
     return ref_lib.adc_epilogue_ref(y, epilogue)
+
+
+def analog_plan_codes(
+    x_codes: jax.Array,
+    w_cat: jax.Array,
+    gain_all: jax.Array,
+    off_cat: jax.Array,
+    *,
+    schedule,
+    chunk_rows: int = BSS2.signed_rows,
+    faithful: bool = True,
+    use_pallas: Optional[bool] = None,
+    block_b: Optional[int] = None,
+) -> jax.Array:
+    """Whole-plan megakernel dispatch: one packed code-domain layer chain,
+    ONE kernel launch (plan executor megakernel hot path).
+
+    On the Pallas path the entire chain runs inside a single
+    ``pallas_call`` with VMEM-resident inter-layer codes; the jnp path
+    traces the identical chain as one fused function
+    (:func:`repro.kernels.ref.analog_plan_ref`).  Returns the final
+    layer's raw accumulated ADC codes ``[B * m_last, n_last]``.
+
+    Differentiable on BOTH paths: the custom VJP backpropagates through
+    the STE/HIL reference chain (frozen gain/offsets, linearized ADC -
+    the same gradients the layer-by-layer replay produces), so compiling
+    a code-domain chain inside a differentiated train step keeps the HIL
+    contract even when the forward ran the Pallas megakernel.
+    """
+    return _plan_codes(x_codes, w_cat, gain_all, off_cat, schedule,
+                       chunk_rows, faithful, use_pallas, block_b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _plan_codes(x_codes, w_cat, gain_all, off_cat, schedule, chunk_rows,
+                faithful, use_pallas, block_b):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        b = x_codes.shape[0] // schedule[0].m_mult
+        bb = block_b if block_b is not None else max(1, min(b, 64))
+        return analog_plan_pallas(
+            x_codes, w_cat, gain_all, off_cat,
+            schedule=schedule, chunk_rows=chunk_rows, faithful=faithful,
+            block_b=bb, interpret=not _on_tpu(),
+            compute_dtype=jnp.bfloat16 if _on_tpu() else jnp.float32,
+        )
+    return ref_lib.analog_plan_ref(
+        x_codes, w_cat, gain_all, off_cat, schedule,
+        chunk_rows=chunk_rows, faithful=faithful,
+    )
+
+
+def _plan_codes_fwd(x_codes, w_cat, gain_all, off_cat, schedule,
+                    chunk_rows, faithful, use_pallas, block_b):
+    y = _plan_codes(x_codes, w_cat, gain_all, off_cat, schedule,
+                    chunk_rows, faithful, use_pallas, block_b)
+    return y, (x_codes, w_cat, gain_all, off_cat)
+
+
+def _plan_codes_bwd(schedule, chunk_rows, faithful, use_pallas, block_b,
+                    res, g):
+    # HIL gradient: differentiate the STE reference chain (gain and
+    # offsets are frozen calibration state inside analog_plan_ref)
+    x_codes, w_cat, gain_all, off_cat = res
+    _, vjp = jax.vjp(
+        lambda x_, w_, g_, o_: ref_lib.analog_plan_ref(
+            x_, w_, g_, o_, schedule,
+            chunk_rows=chunk_rows, faithful=faithful,
+        ),
+        x_codes, w_cat, gain_all, off_cat,
+    )
+    return vjp(g)
+
+
+_plan_codes.defvjp(_plan_codes_fwd, _plan_codes_bwd)
 
 
 def maxmin_pool(x: jax.Array, window: int = 32,

@@ -71,6 +71,65 @@ def adc_epilogue_ref(y_int: jax.Array, epilogue) -> jax.Array:
     return jnp.clip(y, 0.0, float(BSS2.a_max))
 
 
+def analog_plan_ref(
+    x_codes: jax.Array,          # [B * m_mult0, k0_pad] 5-bit codes
+    w_cat: jax.Array,            # [sum(k_pad), n_max] packed weights
+    gain_all: jax.Array,         # [L, n_max] per-layer gains
+    off_cat: jax.Array,          # [sum(n_chunks), n_max] offsets
+    schedule,                    # tuple of MegaLayerMeta (duck-typed)
+    *,
+    chunk_rows: int = BSS2.signed_rows,
+    faithful: bool = True,
+) -> jax.Array:
+    """Pure-jnp megakernel oracle: a whole packed code-domain layer chain
+    as one traced function (the CPU hot path of the plan megakernel and
+    the bit-exactness reference for the Pallas kernel).
+
+    Gradient contract (HIL, paper §III-B): the saturating ADC is applied
+    as a pure straight-through term (``v + sg(adc(v) - v)``), gain and
+    offsets are frozen via ``stop_gradient`` - exactly the linearized
+    backward of ``core.analog._faithful_mm``, so differentiating through
+    the megakernel path reproduces the per-layer HIL gradients while the
+    forward stays bit-identical (same per-chunk dot shapes and order).
+    """
+    sg = jax.lax.stop_gradient
+    h = x_codes.astype(jnp.float32)
+    for li, meta in enumerate(schedule):
+        w_l = w_cat[meta.row0:meta.row0 + meta.k_pad, :meta.n]
+        gain = sg(gain_all[li, :meta.n])
+        acc = jnp.zeros((h.shape[0], meta.n), jnp.float32)
+        for c in range(meta.n_chunks):
+            a_c = h[:, c * chunk_rows:(c + 1) * chunk_rows]
+            w_c = w_l[c * chunk_rows:(c + 1) * chunk_rows, :]
+            v = jnp.einsum("...k,kn->...n", a_c, w_c,
+                           preferred_element_type=jnp.float32)
+            v = v * gain + sg(off_cat[meta.c0 + c, :meta.n])
+            if faithful:
+                adc = jnp.clip(jnp.round(v), BSS2.adc_min, BSS2.adc_max)
+                v = v + sg(adc - v)
+            acc = acc + v
+        if not faithful:
+            lo = float(BSS2.adc_min) * meta.n_chunks
+            hi = float(BSS2.adc_max) * meta.n_chunks
+            acc = acc + sg(jnp.clip(jnp.round(acc), lo, hi) - acc)
+        if li == len(schedule) - 1:
+            return acc
+        # inter-layer ADC epilogue, STE gradients (== run._epilogue_ste)
+        codes = jnp.maximum(acc, 0.0)
+        shifted = codes / float(1 << meta.shift)
+        codes = shifted + sg(jnp.floor(shifted) - shifted)
+        codes = jnp.clip(codes, 0.0, float(BSS2.a_max))
+        if meta.flatten > 1:
+            codes = codes.reshape(codes.shape[0] // meta.flatten,
+                                  meta.flatten * meta.n)
+        nxt = schedule[li + 1]
+        pad = nxt.k_pad - codes.shape[1]
+        if pad:
+            codes = jnp.pad(codes, ((0, 0), (0, pad)))
+        h = codes
+    return acc
+
+
 def maxmin_pool_ref(x: jax.Array, window: int = 32) -> jax.Array:
     """FPGA preprocessing pooling (paper Fig. 7): per non-overlapping window,
     max - min.  x: [..., T] with T % window == 0 -> [..., T // window]."""

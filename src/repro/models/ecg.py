@@ -92,19 +92,27 @@ def ecg_module_spec(cfg: ECGConfig = ECGConfig(), *,
       right-shift requantization to 5-bit codes, so the whole stack runs
       in the code domain with no float glue (and, with
       ``acfg.use_pallas`` + ``acfg.fused_epilogue``, the epilogue is
-      emitted inside the Pallas kernel).
+      emitted inside the Pallas kernel).  The code-domain chain also
+      declares ``input_domain="codes"`` (the preprocessed 5-bit input
+      activations feed the conv directly) and is therefore megakernel-
+      eligible: the compiled model replays conv->fc1->fc2 as ONE analog
+      dispatch (``model.apply(x, megakernel="auto")``, the default) - the
+      paper's single-program inference.  The "none" float-glue chain
+      keeps the legacy float input treatment (re-quantized on entry).
     """
     from repro import api
 
-    def _apply(model, x, *, train: bool = False, key=None):
+    def _apply(model, x, *, train: bool = False, key=None,
+               megakernel="auto"):
         cols = _im2col(x, cfg.conv_taps, cfg.conv_stride)
-        out = model.run_stack(cols, key=key)
+        out = model.run_stack(cols, key=key, megakernel=megakernel)
         return _pool_class_copies(out, cfg, train)
 
     return api.ModuleSpec(
         name="ecg_cdnn",
         kind="stack",
         apply_fn=_apply,
+        input_domain="codes" if epilogue == "relu_shift" else "float",
         layers=(
             api.LayerSpec("conv", cfg.conv_taps * cfg.in_channels,
                           cfg.conv_channels, signed_input="none",

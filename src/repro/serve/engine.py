@@ -42,6 +42,11 @@ class ServeEngine:
         # over repro.exec) so the jitted prefill/decode steps replay the
         # baked plans instead of re-deriving them per forward.  Weight
         # updates (not a serve concern) would require model.relower().
+        # Plan replays default to megakernel="auto": any stack plan the
+        # engine serves that is a pure code-domain chain (eligibility in
+        # exec.lower.pack_megakernel) executes as ONE pallas_call with
+        # VMEM-resident inter-layer codes; LM tree plans (split-encoded
+        # float activations) keep the per-layer fused-split dispatch.
         self.model = None
         step_kw = {}
         if prelower and run.analog.mode != "digital":

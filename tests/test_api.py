@@ -270,6 +270,64 @@ class TestMeshShardedPlans:
         np.testing.assert_array_equal(r_plain.output, r_mesh.output)
 
 
+class TestMegakernelKnob:
+    """CompiledModel.apply(..., megakernel=...) - the api surface of the
+    whole-plan megakernel (ISSUE 3)."""
+
+    def _model(self, acfg=None):
+        cfg = ECG.ECGConfig()
+        params = ECG.ecg_init(jax.random.PRNGKey(0), cfg)
+        spec = ECG.ecg_module_spec(cfg, epilogue="relu_shift")
+        model = api.compile(spec, params, acfg or AnalogConfig())
+        x = jnp.round(
+            jax.random.uniform(jax.random.PRNGKey(1), (4, 2, 126)) * 31
+        )
+        return model, x
+
+    def test_compiled_ecg_chain_is_megakernel_eligible(self):
+        model, x = self._model()
+        plan = model.lower()
+        assert plan.mega is not None
+        assert plan.input_domain == "codes"
+        assert plan.expected_dispatches == 3
+
+    def test_apply_knob_bit_exact_and_single_dispatch(self):
+        model, x = self._model()
+        reset_dispatch_count()
+        y_auto = model.apply(x)                       # default: "auto"
+        assert dispatch_count() == 1                  # ONE analog program
+        reset_dispatch_count()
+        y_off = model.apply(x, megakernel=False)
+        assert dispatch_count() == model.lower().expected_dispatches == 3
+        y_on = model.apply(x, megakernel=True)
+        np.testing.assert_array_equal(np.asarray(y_auto), np.asarray(y_off))
+        np.testing.assert_array_equal(np.asarray(y_auto), np.asarray(y_on))
+
+    def test_float_glue_spec_not_packed(self):
+        cfg = ECG.ECGConfig()
+        params = ECG.ecg_init(jax.random.PRNGKey(0), cfg)
+        model = api.compile(ECG.ecg_module_spec(cfg), params, AnalogConfig())
+        plan = model.lower()
+        assert plan.mega is None and plan.input_domain == "float"
+
+    def test_stack_sharding_specs_cover_mega_leaves(self, mesh11):
+        """The stack spec tree mirrors the plan INCLUDING the megakernel
+        packing (replicated), so a compiled code-domain model device_puts
+        under a mesh like any other plan."""
+        model, x = self._model()
+        specs = model.sharding_specs()
+        plan = model.lower()
+        shardings = shd.sharding_like(specs, plan)
+        assert len(jax.tree.leaves(shardings)) == len(jax.tree.leaves(plan))
+        sharded = jax.device_put(plan, shardings)
+        import repro.exec as E2
+
+        np.testing.assert_array_equal(
+            np.asarray(E2.run(sharded, ECG._im2col(x, 64, 2))),
+            np.asarray(E2.run(plan, ECG._im2col(x, 64, 2))),
+        )
+
+
 class TestDeprecationShims:
     def test_analog_linear_apply_warns_and_matches(self):
         from repro.core.analog import analog_linear_apply

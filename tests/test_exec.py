@@ -270,6 +270,25 @@ class TestDispatchCounts:
         two_pass = dispatch_count()
         assert fused * 2 == two_pass
         assert fused == 3
+        # the static plan metadata agrees with the traced counts
+        assert plan.expected_dispatches == 3
+        assert plan2.expected_dispatches == 6
+
+    def test_cached_jit_replay_counts_zero_but_plan_knows(self):
+        """The ANALOG_DISPATCHES counter bumps at TRACE time only: a
+        cached-jit replay observes 0, so counter-only assertions can pass
+        vacuously.  Plans carry the static expected_dispatches instead."""
+        p = _mk()
+        x = jax.random.normal(KEY, (8, 256)) * 0.2
+        plan = E.lower(p, SPLIT_CFG)
+        f = jax.jit(lambda pl_, x_: E.run(pl_, x_))
+        reset_dispatch_count()
+        f(plan, x).block_until_ready()
+        assert dispatch_count() == plan.expected_dispatches == 1
+        reset_dispatch_count()
+        f(plan, x).block_until_ready()          # cached executable
+        assert dispatch_count() == 0            # the vacuous-pass hazard
+        assert plan.expected_dispatches == 1    # the static ground truth
 
 
 class TestECGPlanExecutor:
@@ -307,6 +326,319 @@ class TestECGPlanExecutor:
                                       np.asarray(y_fused))
         # the classifier still separates something (not all-equal logits)
         assert float(jnp.abs(y_ste).max()) > 0.0
+
+
+def _ecg_code_plan(acfg, seed=0):
+    cfg = ECG.ECGConfig()
+    params = ECG.ecg_init(jax.random.PRNGKey(seed), cfg)
+    from repro.exec.lower import lower_stack
+
+    plan = lower_stack(
+        [params["conv"], params["fc1"], params["fc2"]], acfg,
+        epilogues=["relu_shift", "relu_shift", "none"],
+        flatten_outs=[True, False, False], input_domain="codes",
+    )
+    x = jnp.round(
+        jax.random.uniform(jax.random.PRNGKey(1), (4, 2, 126)) * 31
+    )
+    return plan, ECG._im2col(x, cfg.conv_taps, cfg.conv_stride), params
+
+
+class TestMegakernel:
+    """The whole-plan megakernel (ISSUE 3): one dispatch per code-domain
+    stack, bit-exact vs the layer-by-layer replay."""
+
+    @pytest.mark.parametrize("acfg", [
+        AnalogConfig(),                                 # jnp chain
+        AnalogConfig(mode="analog_fast"),
+        AnalogConfig(use_pallas=True),                  # Pallas interpret
+        AnalogConfig(use_pallas=True, fused_epilogue=True),
+    ], ids=["jnp", "jnp_fast", "pallas", "pallas_fused_epi"])
+    def test_bit_exact_vs_per_layer_ecg_chain(self, acfg):
+        """Acceptance bar: the ECG conv->fc1->fc2 chain through ONE
+        kernel equals the layer-by-layer plan replay bit for bit (fp32,
+        interpret mode on the Pallas path), fpn noise on."""
+        plan, cols, _ = _ecg_code_plan(acfg)
+        assert plan.mega is not None
+        y_per = E.run(plan, cols, megakernel=False)
+        y_mk = E.run(plan, cols, megakernel=True)
+        np.testing.assert_array_equal(np.asarray(y_per), np.asarray(y_mk))
+
+    def test_single_dispatch_and_expected_count(self):
+        plan, cols, _ = _ecg_code_plan(AnalogConfig())
+        reset_dispatch_count()
+        E.run(plan, cols, megakernel=False)
+        assert dispatch_count() == plan.expected_dispatches == 3
+        reset_dispatch_count()
+        E.run(plan, cols, megakernel=True)
+        assert dispatch_count() == 1
+
+    def test_auto_routes_code_chain_through_megakernel(self):
+        """The default megakernel='auto' takes the single-dispatch route
+        for an eligible plan and falls back for a float-glue plan."""
+        plan, cols, params = _ecg_code_plan(AnalogConfig())
+        reset_dispatch_count()
+        E.run(plan, cols)
+        assert dispatch_count() == 1
+        from repro.exec.lower import lower_stack
+
+        plan_f = lower_stack(
+            [params["conv"], params["fc1"], params["fc2"]], AnalogConfig(),
+            flatten_outs=[True, False, False],
+        )
+        assert plan_f.mega is None
+        reset_dispatch_count()
+        E.run(plan_f, cols)
+        assert dispatch_count() == plan_f.expected_dispatches == 3
+
+    def test_force_megakernel_raises_on_ineligible(self):
+        plan, cols, params = _ecg_code_plan(AnalogConfig())
+        from repro.exec.lower import lower_stack
+
+        plan_f = lower_stack(
+            [params["conv"], params["fc1"], params["fc2"]], AnalogConfig(),
+            flatten_outs=[True, False, False],
+        )
+        with pytest.raises(ValueError, match="megakernel=True"):
+            E.run(plan_f, cols, megakernel=True)
+        # shape mismatch: flatten expects the position axis
+        with pytest.raises(ValueError, match="megakernel=True"):
+            E.run(plan, cols.reshape(-1, cols.shape[-1]), megakernel=True)
+
+    def test_noisy_replay_falls_back(self):
+        """Readout-noise replay (key given, deterministic off) keeps the
+        layer-by-layer path under 'auto' and raises under True."""
+        plan, cols, _ = _ecg_code_plan(AnalogConfig(deterministic=False))
+        key = jax.random.PRNGKey(3)
+        reset_dispatch_count()
+        E.run(plan, cols, key=key)
+        assert dispatch_count() == plan.expected_dispatches
+        with pytest.raises(ValueError, match="noisy"):
+            E.run(plan, cols, key=key, megakernel=True)
+
+    @pytest.mark.parametrize("use_pallas", [False, True])
+    def test_hil_gradients_match_per_layer(self, use_pallas):
+        """Differentiating through the megakernel route reproduces the
+        per-layer HIL gradients exactly (frozen gain/offsets, linearized
+        ADC) - on the Pallas path via the ref-chain custom VJP."""
+        from repro.exec.lower import lower_stack
+
+        acfg = AnalogConfig(use_pallas=use_pallas)
+        _, cols, params = _ecg_code_plan(acfg)
+        stack = [params["conv"], params["fc1"], params["fc2"]]
+
+        def loss(ps, mk):
+            plan = lower_stack(
+                ps, acfg, epilogues=["relu_shift", "relu_shift", "none"],
+                flatten_outs=[True, False, False], input_domain="codes",
+            )
+            return (E.run(plan, cols, megakernel=mk) ** 2).mean()
+
+        g_per = jax.grad(loss)(stack, False)
+        g_mk = jax.grad(loss)(stack, True)
+        for i, (gp, gm) in enumerate(zip(g_per, g_mk)):
+            np.testing.assert_allclose(
+                np.asarray(gp["w"]), np.asarray(gm["w"]),
+                rtol=1e-6, atol=1e-6,
+            )
+            # gain is frozen INSIDE the analog passes on both paths; the
+            # only gain gradient is the last layer's differentiable
+            # dequantization divide - identical between the routes
+            np.testing.assert_allclose(
+                np.asarray(gp["gain"]), np.asarray(gm["gain"]),
+                rtol=1e-6, atol=1e-6,
+            )
+            if i < 2:
+                np.testing.assert_array_equal(
+                    np.asarray(gp["gain"]),
+                    np.zeros_like(np.asarray(gp["gain"])),
+                )
+
+    def test_megakernel_flows_through_jit_as_pytree(self):
+        plan, cols, _ = _ecg_code_plan(AnalogConfig())
+        traces = []
+
+        @jax.jit
+        def f(plan, x):
+            traces.append(1)
+            return E.run(plan, x, megakernel=True)
+
+        y1 = f(plan, cols)
+        y2 = f(plan, cols)
+        assert len(traces) == 1
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+        np.testing.assert_array_equal(
+            np.asarray(y1), np.asarray(E.run(plan, cols, megakernel=False))
+        )
+
+    def test_flatten_factor_one_consumes_position_dim(self):
+        """A flatten_out layer with a size-1 position axis still merges
+        it into features on the per-layer path; the megakernel route must
+        produce the SAME output shape (it used to keep the singleton)."""
+        from repro.exec.lower import lower_stack
+
+        ps = [_mk(seed=0, in_dim=128, out_dim=64),
+              _mk(seed=1, in_dim=64, out_dim=32)]
+        plan = lower_stack(
+            ps, AnalogConfig(noise=NOISELESS),
+            epilogues=["relu_shift", "none"], flatten_outs=[True, False],
+            input_domain="codes",
+        )
+        assert plan.mega is not None
+        assert plan.mega.schedule[0].flatten == 1
+        x = jnp.round(jax.random.uniform(KEY, (5, 1, 128)) * 31)
+        y_per = E.run(plan, x, megakernel=False)
+        y_mk = E.run(plan, x)                     # default "auto" routes
+        assert y_per.shape == y_mk.shape == (5, 32)
+        np.testing.assert_array_equal(np.asarray(y_per), np.asarray(y_mk))
+        # without the position axis the shapes cannot feed the flatten
+        with pytest.raises(ValueError, match="trailing batch dim"):
+            E.run(plan, jnp.round(jax.random.uniform(KEY, (5, 128)) * 31),
+                  megakernel=True)
+
+    def test_digital_compile_rejects_forced_megakernel(self):
+        """megakernel=True must raise in digital mode too (no analog plan
+        exists), not silently run the reference path."""
+        from repro import api
+
+        p = {"a": _mk(seed=1, out_dim=256), "b": _mk(seed=2)}
+        spec = api.ModuleSpec(name="2fc", kind="stack", layers=(
+            api.LayerSpec("a", 256, 256), api.LayerSpec("b", 256, 64),
+        ))
+        model = api.compile(spec, p, AnalogConfig(mode="digital"))
+        x = jax.random.normal(KEY, (4, 256)) * 0.2
+        model.apply(x, megakernel=False)          # reference path fine
+        with pytest.raises(ValueError, match="megakernel=True"):
+            model.apply(x, megakernel=True)
+
+    def test_uniform_chain_and_batch_shapes(self):
+        """Megakernel on a flatten-free chain: unbatched and multi-dim
+        batches run bit-exact vs the per-layer replay (which itself
+        flattens only trailing dims - the old reshape mangled these)."""
+        from repro.exec.lower import lower_stack
+
+        ps = [_mk(seed=i, in_dim=256, out_dim=256) for i in range(3)]
+        plan = lower_stack(
+            ps, AnalogConfig(noise=NOISELESS),
+            epilogues=["relu_shift", "relu_shift", "none"],
+            input_domain="codes",
+        )
+        x = jnp.round(jax.random.uniform(KEY, (2, 3, 256)) * 31)
+        y = E.run(plan, x, megakernel=False)
+        assert y.shape == (2, 3, 256)
+        np.testing.assert_array_equal(
+            np.asarray(E.run(plan, x, megakernel=True)), np.asarray(y)
+        )
+        np.testing.assert_array_equal(                 # unbatched [K]
+            np.asarray(E.run(plan, x[0, 0], megakernel=True)),
+            np.asarray(y[0, 0]),
+        )
+
+
+class TestInputDomain:
+    def test_mixed_plan_first_layer_relu_shift_takes_float_input(self):
+        """THE BUG: a mixed plan whose first layer emits relu_shift but is
+        fed float features used to silently treat the input as codes
+        (skipping quantization).  An explicit input_domain='float' baked
+        at lower time quantizes it like any float activation."""
+        from repro.exec.lower import lower_stack
+
+        ps = [_mk(seed=0, out_dim=256), _mk(seed=1)]
+        x = jax.random.normal(KEY, (4, 256)) * 0.2
+        legacy = lower_stack(ps, SPLIT_CFG, epilogues=["relu_shift", "none"])
+        explicit = lower_stack(ps, SPLIT_CFG,
+                               epilogues=["relu_shift", "none"],
+                               input_domain="float")
+        assert legacy.input_domain == "codes"      # documented legacy guess
+        assert explicit.input_domain == "float"
+        want = E.run(legacy, x, x_is_codes=False)  # the correct treatment
+        np.testing.assert_array_equal(
+            np.asarray(E.run(explicit, x)), np.asarray(want)
+        )
+        # and the legacy default really was wrong for float features
+        assert not np.array_equal(np.asarray(E.run(legacy, x)),
+                                  np.asarray(want))
+
+    def test_code_domain_chain_bakes_codes(self):
+        from repro.exec.lower import lower_stack
+
+        ps = [_mk(seed=0, in_dim=256, out_dim=256), _mk(seed=1)]
+        plan = lower_stack(ps, SPLIT_CFG,
+                           epilogues=["relu_shift", "none"])
+        assert plan.input_domain == "codes" and plan.expects_codes
+        plan2 = lower_stack(ps, SPLIT_CFG)
+        assert plan2.input_domain == "float" and not plan2.expects_codes
+
+    def test_unknown_input_domain_rejected(self):
+        from repro.exec.lower import lower_stack
+
+        with pytest.raises(ValueError, match="input_domain"):
+            lower_stack([_mk()], SPLIT_CFG, input_domain="5bit")
+
+
+class TestFlattenOut:
+    def test_flatten_preserves_leading_batch_dims(self):
+        """flatten_out merges ONLY the trailing position axis into the
+        feature axis: multi-dim batches and unbatched inputs survive
+        (the old `h.reshape(h.shape[0], -1)` mangled both)."""
+        from repro.exec.lower import lower_stack
+
+        ps = [_mk(seed=0, in_dim=128, out_dim=64),
+              _mk(seed=1, in_dim=256, out_dim=32)]
+        plan = lower_stack(ps, AnalogConfig(noise=NOISELESS),
+                           flatten_outs=[True, False])
+        x = jax.random.normal(KEY, (5, 4, 128)) * 0.2   # 4 positions x 64
+        y = E.run(plan, x)
+        assert y.shape == (5, 32)
+        x4 = jnp.broadcast_to(x, (2, 5, 4, 128))
+        y4 = E.run(plan, x4)
+        assert y4.shape == (2, 5, 32)
+        np.testing.assert_array_equal(np.asarray(y4[0]), np.asarray(y))
+        y1 = E.run(plan, x[0])                          # unbatched [4, 128]
+        assert y1.shape == (32,)
+        # compare against the same rows as a 1-batch (same dynamic
+        # activation calibration abs-max, so bit-identical values)
+        np.testing.assert_array_equal(np.asarray(y1),
+                                      np.asarray(E.run(plan, x[:1])[0]))
+
+
+class TestEpiloguePinning:
+    def test_ste_epilogue_matches_in_kernel_and_ref(self):
+        """The three ADC-epilogue implementations (elementwise STE, the
+        in-kernel Pallas epilogue, the jnp oracle) are pinned to the same
+        floor-shift semantics - including the negative-code edge, where
+        the ReLU must clamp BEFORE the shift (a float divide of a
+        negative code would round toward zero, not floor)."""
+        from repro.exec.run import _epilogue_ste
+        from repro.kernels.analog_mvm import _apply_epilogue
+
+        y = jnp.asarray([-300.0, -17.0, -1.0, 0.0, 1.0, 7.0, 8.0, 9.0,
+                         63.0, 64.0, 255.0, 256.0, 1000.0])
+        for shift in (0, 1, 3, 5):
+            epi = ("relu_shift", shift)
+            a = np.asarray(_epilogue_ste(y, shift))
+            b = np.asarray(_apply_epilogue(y, epi))
+            c = np.asarray(R.adc_epilogue_ref(y, epi))
+            np.testing.assert_array_equal(a, b)
+            np.testing.assert_array_equal(a, c)
+            # floor-shift: 5-bit codes, negatives clamp to 0
+            want = np.clip(np.floor(np.maximum(np.asarray(y), 0.0)
+                                    / (1 << shift)), 0.0, 31.0)
+            np.testing.assert_array_equal(a, want)
+
+
+class TestLowerFusedStaticCalib:
+    def test_differing_static_scales_rejected(self):
+        ps = [_mk(seed=i, out_dim=32) for i in range(3)]
+        ps[1] = dict(ps[1], a_scale=ps[1]["a_scale"] * 7.0)
+        static = AnalogConfig(noise=NOISELESS, act_calib="static")
+        from repro.exec.lower import lower_fused
+
+        with pytest.raises(ValueError, match="a_scale"):
+            lower_fused(ps, static)
+        # identical scales fuse fine; dynamic calibration never checks
+        lower_fused([ps[0], ps[2]], static)
+        lower_fused(ps, AnalogConfig(noise=NOISELESS))
 
 
 class TestHILGradientParity:

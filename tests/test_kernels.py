@@ -109,6 +109,100 @@ class TestAnalogMVMKernel:
                                    rtol=1e-5)
 
 
+def _pack_chain(dims, seed=0, flatten=None, noise=True):
+    """Lower a code-domain chain and return (pack, x_codes, b)."""
+    from repro.core.analog import AnalogConfig, analog_linear_init
+    from repro.core.noise import NOISELESS, NoiseConfig
+    from repro.exec.lower import lower_stack
+
+    nz = NoiseConfig() if noise else NOISELESS
+    ps = [analog_linear_init(jax.random.fold_in(KEY, seed + i), k, n,
+                             noise=nz)
+          for i, (k, n) in enumerate(dims)]
+    plan = lower_stack(
+        ps, AnalogConfig(noise=nz),
+        epilogues=["relu_shift"] * (len(dims) - 1) + ["none"],
+        flatten_outs=flatten or [False] * len(dims),
+        input_domain="codes",
+    )
+    assert plan.mega is not None
+    return plan.mega
+
+
+class TestAnalogPlanMegakernel:
+    """Whole-plan megakernel vs the pure-jnp packed-chain oracle."""
+
+    @pytest.mark.parametrize("dims", [
+        [(256, 128), (128, 64)],
+        [(128, 123), (123, 123), (123, 10)],      # odd widths, chunk pads
+        [(512, 512), (512, 512), (512, 512)],
+    ])
+    @pytest.mark.parametrize("faithful", [True, False])
+    def test_fp32_exact_vs_oracle(self, dims, faithful):
+        from repro.kernels.analog_plan import analog_plan_pallas
+
+        pack = _pack_chain(dims)
+        b = 12
+        x = jnp.round(jax.random.uniform(KEY, (b, dims[0][0])) * 31)
+        x = jnp.pad(x, ((0, 0), (0, pack.schedule[0].k_pad - dims[0][0])))
+        got = analog_plan_pallas(
+            x, pack.w_cat, pack.gain, pack.off, schedule=pack.schedule,
+            chunk_rows=pack.chunk_rows, faithful=faithful, block_b=4,
+            interpret=True,
+        )
+        want = R.analog_plan_ref(
+            x, pack.w_cat, pack.gain, pack.off, pack.schedule,
+            chunk_rows=pack.chunk_rows, faithful=faithful,
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_flatten_chain_exact(self):
+        """im2col-style flatten inside the kernel: the position rows merge
+        into the next layer's contraction axis in VMEM."""
+        from repro.kernels.analog_plan import analog_plan_pallas
+
+        pack = _pack_chain([(128, 8), (256, 64)], flatten=[True, False])
+        assert pack.schedule[0].flatten == 32
+        b, npos = 6, 32
+        x = jnp.round(jax.random.uniform(KEY, (b * npos, 128)) * 31)
+        got = analog_plan_pallas(
+            x, pack.w_cat, pack.gain, pack.off, schedule=pack.schedule,
+            chunk_rows=pack.chunk_rows, block_b=2, interpret=True,
+        )
+        want = R.analog_plan_ref(x, pack.w_cat, pack.gain, pack.off,
+                                 pack.schedule, chunk_rows=pack.chunk_rows)
+        assert got.shape == (b, 64)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("block_b", [1, 3, 8, 16])
+    def test_block_shape_invariance_and_batch_padding(self, block_b):
+        """Batch blocking (and the zero-code pad rows it introduces) must
+        not change any real row - rows are independent end to end."""
+        from repro.kernels.analog_plan import analog_plan_pallas
+
+        pack = _pack_chain([(256, 200), (200, 40)], seed=5)
+        b = 10
+        x = jnp.round(jax.random.uniform(KEY, (b, 256)) * 31)
+        got = analog_plan_pallas(
+            x, pack.w_cat, pack.gain, pack.off, schedule=pack.schedule,
+            chunk_rows=pack.chunk_rows, block_b=block_b, interpret=True,
+        )
+        want = R.analog_plan_ref(x, pack.w_cat, pack.gain, pack.off,
+                                 pack.schedule, chunk_rows=pack.chunk_rows)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_output_is_integer_valued_codes(self):
+        from repro.kernels.analog_plan import analog_plan_pallas
+
+        pack = _pack_chain([(128, 64), (64, 32)], seed=2)
+        x = jnp.round(jax.random.uniform(KEY, (8, 128)) * 31)
+        y = np.asarray(analog_plan_pallas(
+            x, pack.w_cat, pack.gain, pack.off, schedule=pack.schedule,
+            chunk_rows=pack.chunk_rows, block_b=8, interpret=True,
+        ))
+        np.testing.assert_array_equal(y, np.round(y))
+
+
 class TestMaxMinPoolKernel:
     @pytest.mark.parametrize("b,t,window", [(1, 128, 32), (5, 4096, 32),
                                             (16, 1024, 16), (3, 96, 32)])
