@@ -10,6 +10,16 @@ so the comparison is qualitative: the claim reproduced is that *HIL training
 through the noisy quantized analog substrate reaches sinus/A-fib separation
 comparable to software training*.
 
+``--full`` additionally compares, ON PLANS (the serve-path artifact):
+
+- the two inter-layer chains after HIL training through each - float glue
+  (``epilogue="none"``) vs the paper's code-domain hand-off
+  (``epilogue="relu_shift"``, ReLU at the ADC + 5-bit right-shift), and
+- ideal bake vs calibrated bake: the same trained weights lowered from the
+  oracle fixed pattern (simulation ground truth) vs from a
+  ``repro.calib`` CalibrationSnapshot measured blind on the layers'
+  VirtualChips - the bake real hardware would use.
+
 ``--fast`` (default True when imported by run.py) trims epochs for CI.
 """
 from __future__ import annotations
@@ -23,7 +33,6 @@ import numpy as np
 
 from repro import api
 from repro.core.analog import AnalogConfig
-from repro.core.noise import NoiseConfig
 from repro.data.ecg_synth import ECGDatasetConfig, make_dataset
 from repro.data.preprocess import preprocess_batch
 from repro.models.ecg import (
@@ -61,7 +70,8 @@ def _clip_masters(params):
 
 
 def run(n_train=1500, n_test=500, epochs=30, batch=64, lr=2e-3, seed=0,
-        mode="analog_faithful", verbose=True, patience=6):
+        mode="analog_faithful", verbose=True, patience=6,
+        epilogue="none"):
     t0 = time.time()
     dcfg = ECGDatasetConfig(n_train=n_train, n_test=n_test, seed=1234)
     xtr_raw, ytr = make_dataset(dcfg, "train")
@@ -74,7 +84,7 @@ def run(n_train=1500, n_test=500, epochs=30, batch=64, lr=2e-3, seed=0,
     xval, yval = xtr[:n_val], ytr[:n_val]
     xtr, ytr = xtr[n_val:], ytr[n_val:]
 
-    mcfg = ECGConfig(noise=NoiseConfig())          # mock-mode noise on
+    mcfg = ECGConfig()       # mock-mode noise on (full per-synapse map)
     acfg = AnalogConfig(mode=mode, deterministic=False) if mode != "digital" \
         else AnalogConfig(mode="digital")
     params = ecg_init(jax.random.PRNGKey(seed), mcfg)
@@ -85,7 +95,7 @@ def run(n_train=1500, n_test=500, epochs=30, batch=64, lr=2e-3, seed=0,
     @jax.jit
     def step(params, opt, xb, yb, key):
         (loss, aux), g = jax.value_and_grad(ecg_loss, has_aux=True)(
-            params, xb, yb, acfg, mcfg, key=key
+            params, xb, yb, acfg, mcfg, key=key, epilogue=epilogue
         )
         params, opt, om = O.adamw_update(params, g, opt, ocfg)
         return params, opt, loss, aux["acc"]
@@ -94,7 +104,7 @@ def run(n_train=1500, n_test=500, epochs=30, batch=64, lr=2e-3, seed=0,
     # the api front door: compile once per weight update, replay the plan
     # for every eval batch (the serve contract; training above re-lowers
     # per step inside the grad, the HIL contract)
-    spec = ecg_module_spec(mcfg)
+    spec = ecg_module_spec(mcfg, epilogue=epilogue)
     infer_acfg = acfg.replace(deterministic=True)
     if mode == "digital":
         _infer = jax.jit(
@@ -144,8 +154,9 @@ def run(n_train=1500, n_test=500, epochs=30, batch=64, lr=2e-3, seed=0,
     params = best[1]
     (te_logits,) = eval_batches(params, xte)
     det, fpr, acc = detection_metrics(te_logits, yte)
-    return {
+    out = {
         "mode": mode,
+        "epilogue": epilogue,
         "detection_rate": det,
         "false_positive_rate": fpr,
         "accuracy": acc,
@@ -153,18 +164,45 @@ def run(n_train=1500, n_test=500, epochs=30, batch=64, lr=2e-3, seed=0,
         "history": history,
         "params": params,
     }
+    if mode != "digital":
+        # ideal bake vs calibrated bake, same trained weights, same test
+        # set: the oracle plan knows params["fpn"]; the calibrated plan
+        # only knows what blind measurement on the layers' VirtualChips
+        # recovered (ROADMAP "Next": ideal-bake vs calibrated-snapshot)
+        from repro import calib
+
+        snap = calib.calibrate_model(spec, params,
+                                     jax.random.PRNGKey(seed + 2))
+        plan_cal = api.compile(spec, params, infer_acfg,
+                               calibration=snap).lower()
+        logits_cal = ecg_apply_plan(plan_cal, xte, mcfg)
+        det_c, fpr_c, acc_c = detection_metrics(logits_cal, yte)
+        out.update(calibrated_detection_rate=det_c,
+                   calibrated_false_positive_rate=fpr_c,
+                   calibrated_accuracy=acc_c)
+    return out
 
 
 def main(fast: bool = False) -> None:
     kw = dict(n_train=1000, n_test=300, epochs=20, lr=3e-3) if fast else {}
     print("\n== ECG A-fib classification (paper §IV / Fig. 8) ==")
-    r = run(mode="analog_faithful", verbose=not fast, **kw)
-    print(f"\nHIL analog mode: detection {r['detection_rate']*100:.1f}% @ "
-          f"{r['false_positive_rate']*100:.1f}% FP "
-          f"(paper: 93.7 +- 0.7 % @ 14.0 +- 1.0 %; synthetic data)")
+    print("HIL training through each inter-layer chain, eval ON PLANS "
+          "(ideal bake | calibrated-snapshot bake):")
+    rows = []
+    for epilogue, label in (("none", "float-glue"),
+                            ("relu_shift", "code-domain")):
+        r = run(mode="analog_faithful", verbose=False, epilogue=epilogue,
+                **kw)
+        rows.append(r)
+        print(f"  {label:>12s}: detection {r['detection_rate']*100:5.1f}% "
+              f"@ {r['false_positive_rate']*100:5.1f}% FP | calibrated "
+              f"{r['calibrated_detection_rate']*100:5.1f}% @ "
+              f"{r['calibrated_false_positive_rate']*100:5.1f}% FP")
+    print("(paper: 93.7 +- 0.7 % @ 14.0 +- 1.0 %; synthetic data)")
     rd = run(mode="digital", verbose=False, **kw)
     print(f"digital baseline: detection {rd['detection_rate']*100:.1f}% @ "
           f"{rd['false_positive_rate']*100:.1f}% FP")
+    return rows + [rd]
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ from repro.api.compile import (  # noqa: F401
     compile,
     iter_analog_layers,
     lower_tree,
+    swap_calibration,
     tree_spec,
 )
 from repro.api.module import (  # noqa: F401

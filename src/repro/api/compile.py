@@ -20,10 +20,18 @@ The lowering is built from STE quantizers end to end, so calling
 contract (gradients reach the float masters through the baked plans);
 calling it once outside and replaying the result is the serve/eval
 contract.  Both paths execute the same plans - bit-exact by construction.
+
+``calibration=`` selects the bake source (ISSUE 4): None keeps the oracle
+``params["fpn"]`` bake (simulation-only ground truth); a
+:class:`repro.calib.snapshot.CalibrationSnapshot` bakes MEASURED
+per-(chunk, column) gain/offset tables and static activation scales
+instead - the only bake real hardware supports.  Snapshot entries are
+looked up by spec layer name (stacks) / dotted params path (trees);
+layers without an entry keep the oracle bake.
 """
 from __future__ import annotations
 
-from typing import Iterator, Tuple
+from typing import Iterator, Optional, Tuple
 
 import jax
 
@@ -65,27 +73,58 @@ def _is_qkv_group(node: dict) -> bool:
     return len(dims) == 1 and len(kdims) == 1
 
 
-def _lower_leaf(node: dict, acfg: AnalogConfig):
-    """Lower one analog layer dict; vmap over a leading scan-stack axis."""
+def _lower_leaf(node: dict, acfg: AnalogConfig, calib=None):
+    """Lower one analog layer dict; vmap over a leading scan-stack axis.
+    Measured calibration applies to plain 2-D layers (a scan-stacked
+    layer has no single physical device)."""
     if node["w"].ndim == 3:
         return jax.vmap(lambda p: lower_layer(p, acfg))(node)
-    return lower_layer(node, acfg)
+    return lower_layer(node, acfg, calib=calib)
 
 
-def _lower_qkv(node: dict, acfg: AnalogConfig):
+def _lower_qkv(node: dict, acfg: AnalogConfig, calibs=None):
     qkv = [node[k] for k in _QKV]
     if node["wq"]["w"].ndim == 3:
         return jax.vmap(lambda q, k, v: lower_fused([q, k, v], acfg))(*qkv)
-    return lower_fused(qkv, acfg)
+    return lower_fused(qkv, acfg, calibs=calibs)
 
 
-def lower_tree(params, run_cfg, *, fuse_groups: bool = True):
+def _group_calibs(calibration, path: str):
+    """The QKV group's member calibrations ([wq, wk, wv] order) when the
+    snapshot group-calibrated ALL of them (shared ``a_scale_in``), else
+    None.  A partial/ungrouped snapshot must not unlock static fusion."""
+    if calibration is None:
+        return None
+    calibs = [
+        calibration.layer(f"{path}.{k}" if path else k) for k in _QKV
+    ]
+    if any(c is None for c in calibs):
+        return None
+    return calibs
+
+
+def _static_fusable(calibs) -> bool:
+    return calibs is not None and all(
+        c.a_scale_in is not None for c in calibs
+    )
+
+
+def lower_tree(params, run_cfg, *, fuse_groups: bool = True,
+               calibration=None):
     """Pre-lower every analog layer in a params pytree (the successor of
     ``exec.lower.prelower_tree``): each analog-layer dict gains a
     ``"_plan"`` entry, attention dicts gain a fused ``"_qkv_plan"`` (one
     dispatch for the three projections; their per-layer plans are elided),
     and scan-stacked layer dicts are lowered under vmap so the plans flow
     through ``jax.lax.scan`` with the stacked params.
+
+    ``calibration`` (a CalibrationSnapshot keyed by dotted params path)
+    replaces the oracle fixed-pattern bake with measured tables where an
+    entry exists - and UNLOCKS fused dispatch groups under static
+    activation calibration: a group whose members the snapshot calibrated
+    together (shared ``a_scale_in``) quantizes once at the shared LSB and
+    dequantizes per column, so it no longer needs dynamic calibration to
+    share one input encoding.
 
     Returns the params tree unchanged in digital mode.  Inference
     contract: gradients taken *through* a pre-built tree stop at the baked
@@ -95,28 +134,40 @@ def lower_tree(params, run_cfg, *, fuse_groups: bool = True):
     acfg = _acfg(run_cfg)
     if acfg.mode == "digital":
         return params
-    # fusion assumes one shared input quantization; static per-layer
-    # activation scales may differ, so only fuse under dynamic calibration
-    fuse = fuse_groups and acfg.act_calib == "dynamic"
+    # fusion assumes one shared input quantization: always sound under
+    # dynamic calibration (scale recomputed from the shared input per
+    # call); under static calibration only for snapshot-calibrated
+    # groups (shared a_scale_in: one encoding LSB for the group)
+    dyn = acfg.act_calib == "dynamic"
 
-    def walk(node):
+    def lookup(path):
+        return calibration.layer(path) if calibration is not None else None
+
+    def walk(node, path):
+        joined = ".".join(path)
         if _is_analog_layer(node):
             out = dict(node)
-            out[_PLAN] = _lower_leaf(node, acfg)
+            out[_PLAN] = _lower_leaf(node, acfg, calib=lookup(joined))
             return out
         if isinstance(node, dict):
-            fused = fuse and _is_qkv_group(node)
+            fused = qkv_calibs = None
+            if fuse_groups and _is_qkv_group(node):
+                qkv_calibs = _group_calibs(calibration, joined)
+                fused = dyn or _static_fusable(qkv_calibs)
             out = {}
             for k, v in node.items():
-                out[k] = dict(v) if fused and k in _QKV else walk(v)
+                out[k] = dict(v) if fused and k in _QKV \
+                    else walk(v, path + [k])
             if fused:
-                out[_QKV_PLAN] = _lower_qkv(node, acfg)
+                out[_QKV_PLAN] = _lower_qkv(node, acfg, calibs=qkv_calibs)
             return out
         if isinstance(node, (list, tuple)):
-            return type(node)(walk(v) for v in node)
+            return type(node)(
+                walk(v, path + [str(i)]) for i, v in enumerate(node)
+            )
         return node
 
-    return walk(params)
+    return walk(params, [])
 
 
 def iter_analog_layers(params) -> Iterator[Tuple[str, dict]]:
@@ -171,7 +222,8 @@ def tree_spec(name: str, params, *, param_axes=None, apply_fn=None,
                       apply_fn=apply_fn, param_axes=param_axes)
 
 
-def _compile_stack(spec: ModuleSpec, params, acfg: AnalogConfig):
+def _compile_stack(spec: ModuleSpec, params, acfg: AnalogConfig,
+                   calibration=None):
     layer_params = []
     for l in spec.layers:
         if _is_analog_layer(params):          # single-layer convenience:
@@ -194,31 +246,89 @@ def _compile_stack(spec: ModuleSpec, params, acfg: AnalogConfig):
                 f"{(l.in_dim, l.out_dim)} but params are {got}"
             )
         layer_params.append(p)
+    calibs = None
+    if calibration is not None:
+        calibs = [calibration.layer(l.name) for l in spec.layers]
     return lower_stack(
         layer_params, acfg,
         signed_inputs=[l.signed_input for l in spec.layers],
         epilogues=[l.epilogue for l in spec.layers],
         flatten_outs=[l.flatten_out for l in spec.layers],
         input_domain=spec.input_domain,
+        calibs=calibs,
     )
 
 
-def compile(spec: ModuleSpec, params, run_cfg) -> CompiledModel:  # noqa: A001
+def compile(spec: ModuleSpec, params, run_cfg, *,  # noqa: A001
+            calibration=None) -> CompiledModel:
     """Compile a declared model against concrete parameters.
 
     ``run_cfg`` is a RunConfig (serve/train) or bare AnalogConfig.  In
     digital mode no plans are built and ``apply`` runs the digital
     reference path; otherwise every analog layer is lowered exactly once
     (stack -> one AnalogPlan; tree -> plan entries beside the params).
+    ``calibration`` (a ``repro.calib`` CalibrationSnapshot) bakes
+    measured gain/offset/scale tables in place of the oracle
+    ``params["fpn"]`` - see the module docstring.
     """
     acfg = _acfg(run_cfg)
     if spec.kind == STACK:
         lowered = None if acfg.mode == "digital" else _compile_stack(
-            spec, params, acfg
+            spec, params, acfg, calibration
         )
     elif spec.kind == TREE:
-        lowered = lower_tree(params, acfg)
+        lowered = lower_tree(params, acfg, calibration=calibration)
     else:
         raise ValueError(f"unknown spec kind {spec.kind!r}")
     return CompiledModel(spec=spec, params=params, run_cfg=run_cfg,
-                         lowered=lowered)
+                         lowered=lowered, calibration=calibration)
+
+
+def swap_calibration(lowered, snapshot, *, path: str = ""):
+    """Hot-swap refreshed OFFSET tables into a pre-lowered params tree
+    (the drift-refresh path): every ``"_plan"`` / ``"_qkv_plan"`` entry
+    whose layer(s) the snapshot covers gets its ``chunk_offset`` leaf
+    replaced; weights, gains, scales and all static metadata are kept, so
+    the result has the identical treedef and jitted serve steps keep
+    their compiled executables.  Layers the snapshot does not cover (and
+    scan-stacked plans, which have no single device) are untouched.
+    """
+    import jax.numpy as jnp
+
+    from repro.exec.lower import layer_with_offsets
+
+    def qkv_offsets(p: str):
+        offs = []
+        for k in _QKV:
+            rec = snapshot.layer(f"{p}.{k}" if p else k)
+            if rec is None or rec.chunk_offset is None:
+                return None
+            offs.append(rec.chunk_offset)
+        return jnp.concatenate(offs, axis=-1)
+
+    def walk(node, p: str):
+        if not isinstance(node, (dict, list, tuple)):
+            return node
+        if isinstance(node, (list, tuple)):
+            return type(node)(
+                walk(v, f"{p}.{i}" if p else str(i))
+                for i, v in enumerate(node)
+            )
+        out = {}
+        for k, v in node.items():
+            if k == _PLAN:
+                rec = snapshot.layer(p)
+                out[k] = v if (
+                    rec is None or rec.chunk_offset is None
+                    or getattr(v.w_eff, "ndim", 2) != 2
+                ) else layer_with_offsets(v, rec.chunk_offset)
+            elif k == _QKV_PLAN:
+                off = qkv_offsets(p)
+                out[k] = v if (
+                    off is None or getattr(v.w_eff, "ndim", 2) != 2
+                ) else layer_with_offsets(v, off)
+            else:
+                out[k] = walk(v, f"{p}.{k}" if p else k)
+        return out
+
+    return walk(lowered, path)

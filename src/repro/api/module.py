@@ -85,6 +85,23 @@ class ModuleSpec:
                 return l
         raise KeyError(name)
 
+    def layer_names(self) -> Tuple[str, ...]:
+        """Every declared analog layer name, in order - the key space of
+        a :class:`repro.calib.snapshot.CalibrationSnapshot` for this
+        model (stack: layer names; tree: dotted params paths)."""
+        return tuple(l.name for l in self.layers)
+
+    def groups(self) -> dict:
+        """{group id -> ordered member names} for every fused dispatch
+        group the spec declares.  Group members share one physical input
+        encoding; calibration must fit their activation scales together
+        (``repro.calib.routines.share_group_input_scale``)."""
+        out: dict = {}
+        for l in self.layers:
+            if l.group is not None:
+                out.setdefault(l.group, []).append(l.name)
+        return out
+
 
 def linear_spec(in_dim: int, out_dim: int, *, name: str = "layer",
                 signed_input: Optional[str] = None,

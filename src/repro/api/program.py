@@ -67,12 +67,19 @@ def apply_linear(
 
 @dataclasses.dataclass
 class CompiledModel:
-    """An executable analog model: declaration + params + baked plans."""
+    """An executable analog model: declaration + params + baked plans.
+
+    ``calibration`` records the measurement snapshot the plans were baked
+    from (None = oracle fixed-pattern bake); :meth:`with_calibration`
+    hot-swaps a refreshed snapshot's offset tables into the baked plans
+    without recompiling them.
+    """
 
     spec: Any                      # ModuleSpec
     params: Any                    # the float master parameter pytree
     run_cfg: Any                   # RunConfig or AnalogConfig
     lowered: Any                   # AnalogPlan | lowered tree | None (digital)
+    calibration: Any = None        # CalibrationSnapshot | None (oracle)
 
     @property
     def acfg(self) -> AnalogConfig:
@@ -134,10 +141,35 @@ class CompiledModel:
 
     def relower(self, params) -> "CompiledModel":
         """Re-bake the plans for updated parameters (one weight update =
-        one relower; the spec and run config are reused)."""
+        one relower; the spec, run config and calibration are reused)."""
         from repro.api.compile import compile as _compile
 
-        return _compile(self.spec, params, self.run_cfg)
+        return _compile(self.spec, params, self.run_cfg,
+                        calibration=self.calibration)
+
+    def with_calibration(self, snapshot) -> "CompiledModel":
+        """Hot-swap a refreshed calibration snapshot's OFFSET tables into
+        the baked plans (the drift-refresh path): only ``chunk_offset``
+        leaves change, treedef and static metadata are identical, so
+        jitted replays of :meth:`lower`'s output keep their compiled
+        executables.  Stack plans swap by spec layer name, tree plans by
+        dotted path (``api.compile.swap_calibration``)."""
+        from repro.api.compile import swap_calibration
+        from repro.exec.lower import plan_with_offsets
+
+        if self.lowered is None:
+            return dataclasses.replace(self, calibration=snapshot)
+        if isinstance(self.lowered, AnalogPlan):
+            offs = []
+            for l in self.spec.layers:
+                rec = snapshot.layer(l.name)
+                offs.append(None if rec is None else rec.chunk_offset)
+            lowered = plan_with_offsets(self.lowered, offs)
+        else:
+            lowered = swap_calibration(self.lowered, snapshot)
+        return dataclasses.replace(
+            self, lowered=lowered, calibration=snapshot
+        )
 
     # ------------------------------------------------------------ sharding
     def sharding_specs(self):

@@ -1,0 +1,42 @@
+"""Measurement-driven calibration: the measure side of the HIL contract.
+
+The execute side of this repo (``repro.exec`` consuming baked constants)
+always existed; this subsystem PRODUCES those constants the only way real
+hardware allows - by measuring an opaque device (paper §III-B; Weis et
+al. 2020 is the dedicated calibration paper; hxtorch ships the same
+measure -> fit -> apply pipeline):
+
+    chips = calib.model_chips(spec, params, key)        # the devices
+    snap  = calib.calibrate_model(spec, params, key,    # measure + fit
+                                  chips=chips, acfg=acfg, sample=cols)
+    snap.save("chip0.npz"); snap = CalibrationSnapshot.load("chip0.npz")
+    model = api.compile(spec, params, acfg, calibration=snap)   # apply
+
+    mon = calib.DriftMonitor(chips, snap)               # serve-time loop
+    engine = ServeEngine(..., calibration=snap, drift_monitor=mon)
+
+- :mod:`repro.calib.device`   - VirtualChip: hidden fixed pattern +
+  readout noise behind an opaque ``measure(weights, inputs) -> codes``.
+- :mod:`repro.calib.routines` - offset nulling, linearity-ramp gain
+  fits, static activation scaling, whole-model drive.
+- :mod:`repro.calib.snapshot` - the versioned, serializable
+  CalibrationSnapshot that ``exec.lower`` / ``api.compile`` consume.
+- :mod:`repro.calib.monitor`  - DriftMonitor: detect ADC-offset drift,
+  re-null, hand the engine a hot-swappable refreshed snapshot.
+"""
+from repro.calib.device import VirtualChip  # noqa: F401
+from repro.calib.monitor import DriftMonitor  # noqa: F401
+from repro.calib.routines import (  # noqa: F401
+    calibrate_chip,
+    calibrate_model,
+    fit_activation_scales,
+    fit_gain_table,
+    model_chips,
+    null_offsets,
+    probe_gain,
+    share_group_input_scale,
+)
+from repro.calib.snapshot import (  # noqa: F401
+    CalibrationSnapshot,
+    LayerCalibration,
+)

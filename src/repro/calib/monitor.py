@@ -1,0 +1,99 @@
+"""Offset-drift monitoring for serving deployments.
+
+The fixed-pattern gain of a chip is stable, but ADC offsets drift with
+temperature on deployment timescales.  :class:`DriftMonitor` closes that
+loop for a serving engine: a cheap zero-input probe between batches
+detects drift of the measured offsets away from the active snapshot, and
+when it exceeds the threshold the monitor re-nulls the offsets (full
+repeat count) and hands back a refreshed
+:class:`~repro.calib.snapshot.CalibrationSnapshot`.
+
+The refresh touches ONLY offset tables - gains and activation scales are
+kept - so the engine can hot-swap it into its lowered plans leaf-for-leaf
+(:meth:`repro.api.CompiledModel.with_calibration` /
+``api.swap_calibration``) without changing any treedef or static
+metadata: every jitted prefill/decode step keeps replaying its compiled
+executable, no recompilation.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.calib.device import VirtualChip
+from repro.calib.routines import null_offsets
+from repro.calib.snapshot import CalibrationSnapshot
+
+
+class DriftMonitor:
+    """Watches the devices behind a snapshot and refreshes it on drift.
+
+    chips:           {layer name -> VirtualChip}, the serving devices.
+    snapshot:        the currently-deployed calibration.
+    threshold_lsb:   RMS offset deviation (ADC LSB) that triggers a
+                     refresh; default 0.5 (half an LSB - beyond that the
+                     baked offsets are wrong by more than the rounding
+                     floor).
+    probe_repeats:   averaging depth of the cheap detection probe.
+    refresh_repeats: averaging depth of the re-nulling measurement.
+    every:           check cadence in :meth:`maybe_refresh` calls (the
+                     engine calls it once per served batch).
+    """
+
+    def __init__(
+        self,
+        chips: Dict[str, VirtualChip],
+        snapshot: CalibrationSnapshot,
+        *,
+        threshold_lsb: float = 0.5,
+        probe_repeats: int = 16,
+        refresh_repeats: int = 64,
+        every: int = 1,
+    ):
+        self.chips = dict(chips)
+        self.snapshot = snapshot
+        self.threshold_lsb = float(threshold_lsb)
+        self.probe_repeats = int(probe_repeats)
+        self.refresh_repeats = int(refresh_repeats)
+        self.every = max(int(every), 1)
+        self.refreshes = 0
+        self._calls = 0
+
+    # --------------------------------------------------------------- probes
+    def drift_lsb(self) -> float:
+        """Worst per-layer RMS deviation (ADC LSB) of freshly probed
+        offsets from the active snapshot's tables."""
+        worst = 0.0
+        for name, chip in self.chips.items():
+            rec = self.snapshot.layer(name)
+            if rec is None or rec.chunk_offset is None:
+                continue
+            probe = null_offsets(chip, repeats=self.probe_repeats)
+            rms = float(jnp.sqrt(
+                jnp.mean((probe - rec.chunk_offset) ** 2)
+            ))
+            worst = max(worst, rms)
+        return worst
+
+    def refresh(self) -> CalibrationSnapshot:
+        """Re-null every layer's offsets (full averaging depth) and
+        return the refreshed snapshot (gains/scales untouched).  The
+        refreshed snapshot becomes the monitor's new reference."""
+        self.snapshot = self.snapshot.with_offsets({
+            name: null_offsets(chip, repeats=self.refresh_repeats)
+            for name, chip in self.chips.items()
+        })
+        self.refreshes += 1
+        return self.snapshot
+
+    def maybe_refresh(self) -> Optional[CalibrationSnapshot]:
+        """The serving hook: probe on the configured cadence and return a
+        refreshed snapshot iff drift exceeded the threshold (None
+        otherwise - the engine keeps its plans)."""
+        self._calls += 1
+        if self._calls % self.every:
+            return None
+        if self.drift_lsb() <= self.threshold_lsb:
+            return None
+        return self.refresh()

@@ -1,0 +1,302 @@
+"""Measurement-driven calibration routines (measure -> fit, blind).
+
+The three fits of the BSS-2 calibration pipeline (Weis et al. 2020 §III;
+paper §III-B "incorporating hardware-related constraints"), implemented
+against the opaque :class:`repro.calib.device.VirtualChip` interface -
+no routine here ever sees ground-truth deviations:
+
+1. **offset nulling** (:func:`null_offsets`): zero weights, zero events -
+   each chunk pass reads back exactly its ADC offset plus readout noise.
+   Repeat-averaging recovers the offset to sub-LSB residual; the readout
+   noise itself dithers the 1-LSB ADC rounding, which is what makes
+   sub-LSB recovery possible at all.
+2. **gain fit** (:func:`fit_gain_table`): per chunk, write a unit weight
+   probe on that chunk's rows and sweep a linearity ramp of input levels
+   (paper Fig. 3 style).  The least-squares slope of ADC code vs input
+   level per column, normalized by the probe, is that (chunk, column)'s
+   fixed-pattern gain; the intercept absorbs the offset, repeats average
+   the readout noise.
+3. **activation scaling** (:func:`fit_activation_scales` /
+   :func:`share_group_input_scale`): static per-layer input LSBs from a
+   calibration batch run through the already-(offset+gain)-calibrated
+   chain, percentile-robust; fused dispatch groups share one physical
+   input encoding, so their members get a common ``a_scale_in``.
+
+:func:`calibrate_model` drives all three over every analog layer of a
+:class:`repro.api.ModuleSpec` and returns the serializable
+:class:`~repro.calib.snapshot.CalibrationSnapshot` that
+``api.compile(spec, params, run, calibration=...)`` consumes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.hw import BSS2
+from repro.core.noise import NoiseConfig
+from repro.calib.device import VirtualChip
+from repro.calib.snapshot import CalibrationSnapshot, LayerCalibration
+
+# ramp levels for the linearity sweep: spread over the 5-bit range,
+# avoiding the extremes (0 carries no signal; 31 sits closest to ADC
+# saturation for high-gain columns)
+DEFAULT_RAMP = (2, 6, 10, 14, 18, 22, 26, 30)
+
+
+def probe_gain(chunk_rows: int, headroom: float = 0.8) -> float:
+    """Requested analog gain for the ramp sweep: the top ramp level on a
+    full unit-weight chunk lands at ``headroom`` of the ADC range, so no
+    column saturates even with fixed-pattern gain spread."""
+    return headroom * float(BSS2.adc_max) / (float(BSS2.a_max) * chunk_rows)
+
+
+def null_offsets(chip: VirtualChip, *, repeats: int = 64) -> jax.Array:
+    """Measure the per-(chunk, column) ADC offsets: zero weights, zero
+    events, average ``repeats`` passes.  Returns [C, N]."""
+    w = jnp.zeros((chip.k, chip.n), jnp.float32)
+    a = jnp.zeros((repeats, chip.k), jnp.float32)
+    adc = chip.measure(w, a)                       # [R, C, N]
+    return adc.mean(axis=0)
+
+
+def _chunk_rows_real(chip: VirtualChip, c: int) -> int:
+    hi = min(chip.k, (c + 1) * chip.chunk_rows)
+    return hi - c * chip.chunk_rows
+
+
+def fit_gain_table(
+    chip: VirtualChip,
+    *,
+    levels: Sequence[int] = DEFAULT_RAMP,
+    repeats: int = 8,
+) -> jax.Array:
+    """Fit the per-(chunk, column) fixed-pattern gain by linearity ramp
+    sweeps.  Returns [C, N] unitless multipliers (1.0 = nominal).
+
+    Per chunk: unit weights on that chunk's rows only, events ramped over
+    ``levels`` (each level measured ``repeats`` times), least-squares
+    slope per column.  The requested probe gain cancels in the
+    normalization, offsets cancel in the slope, readout noise and ADC
+    rounding average out over the sweep.
+    """
+    g = probe_gain(chip.chunk_rows)
+    alphas = jnp.asarray(levels, jnp.float32)
+    tables = []
+    for c in range(chip.n_chunks):
+        lo, hi = c * chip.chunk_rows, min(chip.k, (c + 1) * chip.chunk_rows)
+        w = jnp.zeros((chip.k, chip.n), jnp.float32).at[lo:hi].set(1.0)
+        a = jnp.zeros(
+            (len(alphas), repeats, chip.k), jnp.float32
+        ).at[:, :, lo:hi].set(alphas[:, None, None])
+        adc = chip.measure(w, a, gain=g)[..., c, :]  # [L, R, N]
+        y = adc.mean(axis=1)                         # [L, N]
+        da = alphas - alphas.mean()
+        slope = (da[:, None] * (y - y.mean(axis=0))).sum(0) / (da**2).sum()
+        tables.append(slope / (g * _chunk_rows_real(chip, c)))
+    return jnp.stack(tables, axis=0)
+
+
+def calibrate_chip(
+    chip: VirtualChip,
+    *,
+    offset_repeats: int = 64,
+    gain_levels: Sequence[int] = DEFAULT_RAMP,
+    gain_repeats: int = 8,
+) -> LayerCalibration:
+    """Full blind calibration of one chip: offset nulling + gain fit.
+    (Activation scaling is a model-level fit - see
+    :func:`fit_activation_scales`.)"""
+    return LayerCalibration(
+        gain_table=fit_gain_table(
+            chip, levels=gain_levels, repeats=gain_repeats
+        ),
+        chunk_offset=null_offsets(chip, repeats=offset_repeats),
+    )
+
+
+# --------------------------------------------------------------------------
+# activation scaling (model-level: needs the layer chain, not one chip)
+# --------------------------------------------------------------------------
+def fit_activation_scales(
+    spec,
+    params,
+    acfg,
+    snapshot: CalibrationSnapshot,
+    sample: jax.Array,
+    *,
+    pct: float = 99.9,
+) -> CalibrationSnapshot:
+    """Static activation-scale calibration for a STACK spec: run the
+    calibration batch through the chain lowered from the (offset+gain)
+    snapshot under dynamic calibration, record each float-consuming
+    layer's input, and fit a percentile-robust static LSB per layer.
+
+    ``sample`` is the input of the FIRST analog layer (after any host
+    preprocessing such as the ECG im2col).  Layers that consume 5-bit
+    codes (a preceding ``relu_shift`` hand-off or a code-domain plan
+    input) need no scale and keep ``a_scale=None``.
+    """
+    from repro.exec.run import run_layer
+    from repro.exec.plan import EPILOGUE_NONE, EPILOGUE_RELU_SHIFT
+
+    acfg = getattr(acfg, "analog", acfg)
+    if spec.kind != "stack":
+        raise ValueError(
+            "activation-scale calibration walks a layer chain; tree "
+            "specs keep their per-layer static scales"
+        )
+    plan = _lower_stack_from_spec(
+        spec, params, acfg.replace(act_calib="dynamic"), snapshot
+    )
+    h = jnp.asarray(sample, jnp.float32)
+    is_codes = plan.expects_codes
+    out = snapshot
+    n = len(plan.layers)
+    for i, (l, lp) in enumerate(zip(spec.layers, plan.layers)):
+        if not is_codes:
+            rec = out.layer(l.name) or LayerCalibration()
+            out = out.with_layer(l.name, rec.replace(
+                a_scale=quant.calibrate_act_scale(h, pct)
+            ))
+        h = run_layer(lp, h, plan.cfg, x_is_codes=is_codes)
+        if lp.epilogue == EPILOGUE_NONE and i < n - 1:
+            h = jax.nn.relu(h)
+            is_codes = False
+        else:
+            is_codes = lp.epilogue == EPILOGUE_RELU_SHIFT
+        if lp.flatten_out:
+            h = h.reshape(h.shape[:-2] + (-1,))
+    return out
+
+
+def share_group_input_scale(
+    snapshot: CalibrationSnapshot,
+    names: Sequence[str],
+    *,
+    scales: Optional[Sequence] = None,
+) -> CalibrationSnapshot:
+    """Give a fused dispatch group ONE physical input encoding: set every
+    member's ``a_scale_in`` to the widest member scale (no member's range
+    is truncated), keeping each member's own ``a_scale`` for the dequant
+    side.  ``scales`` overrides the per-member scales when the snapshot
+    does not carry them (e.g. scales fitted elsewhere)."""
+    if scales is None:
+        scales = []
+        for name in names:
+            rec = snapshot.layer(name)
+            if rec is None or rec.a_scale is None:
+                raise ValueError(
+                    f"no calibrated a_scale for group member {name!r}; "
+                    "pass scales= explicitly"
+                )
+            scales.append(rec.a_scale)
+    shared = jnp.max(jnp.stack(
+        [jnp.asarray(s, jnp.float32) for s in scales]
+    ))
+    out = snapshot
+    for name, s in zip(names, scales):
+        rec = out.layer(name) or LayerCalibration()
+        out = out.with_layer(name, rec.replace(
+            a_scale=jnp.asarray(s, jnp.float32), a_scale_in=shared
+        ))
+    return out
+
+
+# --------------------------------------------------------------------------
+# whole-model drive
+# --------------------------------------------------------------------------
+def _stack_layer_params(spec, params):
+    from repro.api.compile import _is_analog_layer
+
+    out = []
+    for l in spec.layers:
+        p = params if _is_analog_layer(params) else params[l.name]
+        out.append(p)
+    return out
+
+
+def _lower_stack_from_spec(spec, params, acfg, snapshot):
+    from repro.exec.lower import lower_stack
+
+    return lower_stack(
+        _stack_layer_params(spec, params), acfg,
+        signed_inputs=[l.signed_input for l in spec.layers],
+        epilogues=[l.epilogue for l in spec.layers],
+        flatten_outs=[l.flatten_out for l in spec.layers],
+        input_domain=spec.input_domain,
+        calibs=[snapshot.layer(l.name) for l in spec.layers],
+    )
+
+
+def model_chips(
+    spec,
+    params,
+    key: jax.Array,
+    *,
+    noise: NoiseConfig = NoiseConfig(),
+    chunk_rows: int = BSS2.signed_rows,
+) -> Dict[str, VirtualChip]:
+    """One :class:`VirtualChip` per analog layer of the model, wrapping
+    that layer's frozen deviations (``params[...]["fpn"]``) as the hidden
+    device state.  Keys are spec layer names (stack) or dotted tree paths
+    (tree) - the same names the snapshot uses."""
+    from repro.api.compile import iter_analog_layers
+
+    if spec.kind == "stack":
+        named = list(zip(
+            [l.name for l in spec.layers], _stack_layer_params(spec, params)
+        ))
+    else:
+        named = [
+            (path, node) for path, node in iter_analog_layers(params)
+            if node["w"].ndim == 2        # scan-stacked layers: no chip
+        ]
+    return {
+        name: VirtualChip.from_params(
+            p, jax.random.fold_in(key, i), noise=noise,
+            chunk_rows=chunk_rows,
+        )
+        for i, (name, p) in enumerate(named)
+    }
+
+
+def calibrate_model(
+    spec,
+    params,
+    key: jax.Array,
+    *,
+    acfg=None,
+    chips: Optional[Dict[str, VirtualChip]] = None,
+    noise: NoiseConfig = NoiseConfig(),
+    sample: Optional[jax.Array] = None,
+    offset_repeats: int = 64,
+    gain_levels: Sequence[int] = DEFAULT_RAMP,
+    gain_repeats: int = 8,
+    source: str = "",
+) -> CalibrationSnapshot:
+    """Measure every analog layer's device and return the model's
+    :class:`CalibrationSnapshot` - the measure->fit half of the
+    measure->fit->apply pipeline (apply = ``api.compile(...,
+    calibration=snapshot)``).
+
+    ``chips`` supplies the devices (defaults to :func:`model_chips` over
+    the params' own frozen deviations - the simulation stand-in for real
+    hardware).  ``sample`` (stack specs, with ``acfg``) additionally fits
+    static activation scales from a calibration batch.
+    """
+    if chips is None:
+        chips = model_chips(spec, params, key, noise=noise)
+    snap = CalibrationSnapshot(source=source)
+    for name, chip in chips.items():
+        snap = snap.with_layer(name, calibrate_chip(
+            chip, offset_repeats=offset_repeats,
+            gain_levels=gain_levels, gain_repeats=gain_repeats,
+        ))
+    if sample is not None:
+        if acfg is None:
+            raise ValueError("sample-based activation scaling needs acfg")
+        snap = fit_activation_scales(spec, params, acfg, snap, sample)
+    return snap

@@ -1,0 +1,143 @@
+"""Versioned calibration state: what measurement produced, frozen.
+
+A :class:`CalibrationSnapshot` is the durable artifact of one calibration
+run against one device (hxtorch ships the same split: measure -> fit ->
+a serialized calibration result that deployments load; Weis et al. 2020,
+Spilger et al. 2020).  It maps layer names (stack-spec layer names or
+dotted tree paths) to :class:`LayerCalibration` records:
+
+- ``gain_table``    [C, N]: per-(chunk, column) fixed-pattern gain
+                    multipliers fitted from linearity ramp sweeps,
+- ``chunk_offset``  [C, N]: per-(chunk, column) ADC offsets from
+                    zero-input nulling,
+- ``a_scale``       scalar: static activation LSB fitted from a
+                    calibration batch,
+- ``a_scale_in``    scalar: the SHARED input LSB of a fused dispatch
+                    group (one physical input encoding per group).
+
+Both are frozen JAX pytrees, so a snapshot flows through ``jax.jit``
+boundaries like any params tree, and ``exec.lower`` consumes the records
+in place of oracle fixed-pattern params.  ``save``/``load`` round-trip
+bit-exactly through a single ``.npz`` file (no pickling).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FORMAT_VERSION = "repro-calib-v1"
+
+_FIELDS = ("gain_table", "chunk_offset", "a_scale", "a_scale_in")
+_SEP = "::"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCalibration:
+    """Measured calibration record for ONE analog layer (frozen pytree).
+    Every field is optional: absent quantities fall back to the layer's
+    own parameters at lower time (see :func:`repro.exec.lower.lower_layer`).
+    """
+
+    gain_table: Optional[jax.Array] = None     # [C, N]
+    chunk_offset: Optional[jax.Array] = None   # [C, N]
+    a_scale: Optional[jax.Array] = None        # scalar
+    a_scale_in: Optional[jax.Array] = None     # scalar (fused groups)
+
+    def replace(self, **kw) -> "LayerCalibration":
+        return dataclasses.replace(self, **kw)
+
+
+jax.tree_util.register_dataclass(
+    LayerCalibration,
+    data_fields=["gain_table", "chunk_offset", "a_scale", "a_scale_in"],
+    meta_fields=[],
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationSnapshot:
+    """One device's calibration state: {layer name -> LayerCalibration}.
+
+    ``version`` tags the serialization format (load refuses unknown
+    versions rather than misinterpreting tables); ``source`` is a free
+    provenance string (chip id / measurement session).
+    """
+
+    layers: Dict[str, LayerCalibration] = dataclasses.field(
+        default_factory=dict
+    )
+    version: str = FORMAT_VERSION
+    source: str = ""
+
+    def layer(self, name: str) -> Optional[LayerCalibration]:
+        return self.layers.get(name)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.layers
+
+    def with_layer(self, name: str, calib: LayerCalibration
+                   ) -> "CalibrationSnapshot":
+        return dataclasses.replace(
+            self, layers={**self.layers, name: calib}
+        )
+
+    def with_offsets(self, offsets: Dict[str, jax.Array]
+                     ) -> "CalibrationSnapshot":
+        """Refresh ONLY the offset tables of the named layers (the drift
+        hot-swap: gains, activation scales and every other layer's record
+        are kept)."""
+        layers = dict(self.layers)
+        for name, off in offsets.items():
+            base = layers.get(name, LayerCalibration())
+            layers[name] = base.replace(
+                chunk_offset=jnp.asarray(off, jnp.float32)
+            )
+        return dataclasses.replace(self, layers=layers)
+
+    # ------------------------------------------------------------- serialize
+    def save(self, path) -> None:
+        """Serialize to one ``.npz`` (bit-exact round-trip, no pickle)."""
+        arrays = {
+            "__version__": np.asarray(self.version),
+            "__source__": np.asarray(self.source),
+        }
+        for name, rec in sorted(self.layers.items()):
+            for field in _FIELDS:
+                v = getattr(rec, field)
+                if v is not None:
+                    arrays[f"{name}{_SEP}{field}"] = np.asarray(v)
+        with open(path, "wb") as f:
+            np.savez(f, **arrays)
+
+    @classmethod
+    def load(cls, path) -> "CalibrationSnapshot":
+        with np.load(path, allow_pickle=False) as z:
+            version = str(z["__version__"])
+            if version != FORMAT_VERSION:
+                raise ValueError(
+                    f"snapshot format {version!r} is not "
+                    f"{FORMAT_VERSION!r}; re-measure or migrate"
+                )
+            source = str(z["__source__"])
+            layers: Dict[str, dict] = {}
+            for key in z.files:
+                if key.startswith("__"):
+                    continue
+                name, field = key.rsplit(_SEP, 1)
+                layers.setdefault(name, {})[field] = jnp.asarray(z[key])
+        return cls(
+            layers={n: LayerCalibration(**kw) for n, kw in layers.items()},
+            version=version,
+            source=source,
+        )
+
+
+jax.tree_util.register_dataclass(
+    CalibrationSnapshot,
+    data_fields=["layers"],
+    meta_fields=["version", "source"],
+)

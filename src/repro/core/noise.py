@@ -17,7 +17,15 @@ calibration):
 Large-model memory note: a full per-synapse gain map doubles parameter
 memory; ``mode="rank1"`` factorizes it into per-row x per-column gains (the
 dominant physical terms are per-driver and per-neuron mismatch), which costs
-O(K+N) instead of O(K*N).  The ECG reproduction uses the full map.
+O(K+N) instead of O(K*N).  The default is therefore ``rank1`` (LM-scale
+layers); the ECG reproduction uses the full map and REQUESTS IT EXPLICITLY
+(``repro.models.ecg.ECGConfig`` defaults to ``NoiseConfig(mode="full")``) -
+callers must not rely on anything silently upgrading the mode for them.
+
+The fixed pattern is frozen per chip; the one quantity that moves on
+deployment timescales is the ADC offset (thermal drift) - modeled by
+:func:`offset_drift` and compensated by the calibration subsystem's drift
+monitor (:mod:`repro.calib.monitor`).
 """
 from __future__ import annotations
 
@@ -110,3 +118,11 @@ def readout_noise(
     if key is None or cfg.readout_std == 0.0 or cfg.mode == "none":
         return None
     return cfg.readout_std * jax.random.normal(key, shape, jnp.float32)
+
+
+def offset_drift(key: jax.Array, shape: tuple, std_lsb: float) -> jax.Array:
+    """One thermal-drift step of the per-(chunk, column) ADC offsets:
+    a Gaussian perturbation of ``std_lsb`` ADC LSB.  Offsets drift on
+    deployment timescales (temperature); gains are stable - which is why
+    the drift monitor re-nulls offsets only."""
+    return std_lsb * jax.random.normal(key, shape, jnp.float32)

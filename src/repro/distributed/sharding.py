@@ -259,6 +259,7 @@ def layer_plan_specs(lp, w_spec: Sequence[Optional[str]]):
         w_eff=w_spec,
         w_scale=prefix + (None, out_name),
         a_scale=prefix,
+        a_scale_in=None if lp.a_scale_in is None else prefix,
         gain=per_col(lp.gain),
         chunk_offset=(
             None if lp.chunk_offset is None

@@ -10,12 +10,14 @@ See the module docstrings for the lifecycle contract (train re-lowers
 each step; serve/eval lower once and replay).
 """
 from repro.exec.lower import (  # noqa: F401
+    layer_with_offsets,
     lower,
     lower_fused,
     lower_layer,
     lower_stack,
     megakernel_ineligible_reason,
     pack_megakernel,
+    plan_with_offsets,
     prelower_tree,
 )
 from repro.exec.plan import (  # noqa: F401

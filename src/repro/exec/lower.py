@@ -15,9 +15,24 @@ the frozen calibration state is computed HERE, once:
 
 Per-call quantities (dynamic activation scale, readout-noise keys) stay in
 :mod:`repro.exec.run`.
+
+Calibration state comes from one of two sources, selected per layer:
+
+- **oracle bake** (default): the frozen fixed-pattern dict in
+  ``params["fpn"]`` - ground-truth deviations, available only in
+  simulation;
+- **measured bake**: a ``calib`` record (duck-typed; canonically a
+  :class:`repro.calib.snapshot.LayerCalibration`) produced by blind
+  measurement on a device - per-(chunk, column) ``gain_table`` and
+  ``chunk_offset`` tables replace ``params["fpn"]``, optional static
+  ``a_scale`` / shared-group ``a_scale_in`` replace the params scale.
+  Quantities the record did not measure (None fields) keep the oracle
+  bake.  This is the ONLY bake path that exists on real hardware (the
+  chip never reveals its fixed pattern; Weis et al. 2020).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Sequence
 
 import jax
@@ -46,13 +61,16 @@ def lower_layer(
     epilogue: str = EPILOGUE_NONE,
     shift: Optional[int] = None,
     flatten_out: bool = False,
+    calib=None,
 ) -> LayerPlan:
     """Lower ONE analog linear layer's parameters to a :class:`LayerPlan`.
 
     ``signed_input`` overrides ``cfg.signed_input`` per layer (the ECG
     stack runs every layer unsigned, LM blocks run split).  ``epilogue``
     selects the inter-layer ADC treatment; ``shift`` defaults to the
-    range-matched right-shift for this layer's chunk count.
+    range-matched right-shift for this layer's chunk count.  ``calib``
+    (a measured :class:`repro.calib.snapshot.LayerCalibration`) replaces
+    the oracle ``params["fpn"]`` bake with measurement-driven tables.
     """
     if epilogue not in (EPILOGUE_NONE, EPILOGUE_RELU_SHIFT):
         raise ValueError(f"unknown epilogue {epilogue!r}")
@@ -67,20 +85,54 @@ def lower_layer(
     k, n = w.shape
     w_scale = params["w_scale"]
     w_code = quant.quantize_weight(w, w_scale)
-    fpn = params.get("fpn", {})
-    w_eff = noise_lib.effective_weight(w_code, fpn)
     n_chunks = -(-k // cfg.chunk_rows)
+    a_scale = jnp.asarray(params["a_scale"], jnp.float32)
+    a_scale_in = None
+    fpn = params.get("fpn", {})
+    if calib is not None:
+        # measured bake: per-(chunk, column) tables from blind device
+        # measurement stand in for the ground-truth fixed pattern.
+        # Quantities the record did NOT measure (None fields) fall back
+        # to the oracle params - a scales-only record (e.g. built by
+        # share_group_input_scale with explicit scales) must not
+        # silently model an ideal chip.
+        gt = getattr(calib, "gain_table", None)
+        if gt is not None:
+            if gt.shape != (n_chunks, n):
+                raise ValueError(
+                    f"gain_table shape {gt.shape} does not match the "
+                    f"({n_chunks}, {n}) chunk grid of a {k}x{n} layer"
+                )
+            w_eff = w_code * jnp.repeat(gt, cfg.chunk_rows, axis=0)[:k]
+        else:
+            w_eff = noise_lib.effective_weight(w_code, fpn)
+        chunk_off = getattr(calib, "chunk_offset", None)
+        if chunk_off is not None:
+            if chunk_off.shape != (n_chunks, n):
+                raise ValueError(
+                    f"chunk_offset shape {chunk_off.shape} does not "
+                    f"match the ({n_chunks}, {n}) chunk grid of a "
+                    f"{k}x{n} layer"
+                )
+        else:
+            chunk_off = noise_lib.chunk_offsets(fpn, n_chunks, n)
+        if getattr(calib, "a_scale", None) is not None:
+            a_scale = jnp.asarray(calib.a_scale, jnp.float32)
+        if getattr(calib, "a_scale_in", None) is not None:
+            a_scale_in = jnp.asarray(calib.a_scale_in, jnp.float32)
+    else:
+        w_eff = noise_lib.effective_weight(w_code, fpn)
+        chunk_off = noise_lib.chunk_offsets(fpn, n_chunks, n)
     pad = n_chunks * cfg.chunk_rows - k
     if pad:
         w_eff = jnp.pad(w_eff, ((0, pad), (0, 0)))
-    chunk_off = noise_lib.chunk_offsets(fpn, n_chunks, n)
     signed = cfg.signed_input if signed_input is None else signed_input
     if shift is None:
         shift = default_shift(n_chunks)
     return LayerPlan(
         w_eff=w_eff,
         w_scale=w_scale,
-        a_scale=jnp.asarray(params["a_scale"], jnp.float32),
+        a_scale=a_scale,
         gain=jnp.asarray(params["gain"], jnp.float32),
         chunk_offset=chunk_off,
         colsum=w_eff.sum(axis=0) if signed == "offset" else None,
@@ -92,6 +144,7 @@ def lower_layer(
         epilogue=epilogue,
         shift=shift,
         flatten_out=flatten_out,
+        a_scale_in=a_scale_in,
     )
 
 
@@ -120,6 +173,7 @@ def lower_stack(
     epilogues: Optional[Sequence[str]] = None,
     flatten_outs: Optional[Sequence[bool]] = None,
     input_domain: Optional[str] = None,
+    calibs: Optional[Sequence] = None,
 ) -> AnalogPlan:
     """Lower an ordered stack of layers into one :class:`AnalogPlan`.
 
@@ -127,7 +181,9 @@ def lower_stack(
     layer's epilogue is forced to "none" (final outputs dequantize to
     float logits).  ``input_domain`` declares what the plan's INITIAL
     input is ("codes" | "float"); None keeps the legacy inference from
-    layer 0's epilogue.  Code-domain chains additionally get a megakernel
+    layer 0's epilogue.  ``calibs[i]`` (optional) is layer i's measured
+    :class:`~repro.calib.snapshot.LayerCalibration` - see
+    :func:`lower_layer`.  Code-domain chains additionally get a megakernel
     packing baked (:func:`pack_megakernel`) so the executor can run the
     whole stack as one Pallas kernel.
     """
@@ -135,14 +191,15 @@ def lower_stack(
     signed_inputs = signed_inputs or [None] * n
     epilogues = list(epilogues or [EPILOGUE_NONE] * n)
     flatten_outs = flatten_outs or [False] * n
+    calibs = calibs or [None] * n
     if n:
         epilogues[-1] = EPILOGUE_NONE
     layers = tuple(
         lower_layer(
-            p, cfg, signed_input=s, epilogue=e, flatten_out=f,
+            p, cfg, signed_input=s, epilogue=e, flatten_out=f, calib=c,
         )
-        for p, s, e, f in zip(layer_params, signed_inputs, epilogues,
-                              flatten_outs)
+        for p, s, e, f, c in zip(layer_params, signed_inputs, epilogues,
+                                 flatten_outs, calibs)
     )
     plan = AnalogPlan(
         layers=layers, cfg=cfg,
@@ -172,6 +229,7 @@ def lower_fused(
     cfg: AnalogConfig,
     *,
     signed_input: Optional[str] = None,
+    calibs: Optional[Sequence] = None,
 ) -> LayerPlan:
     """Lower N same-input layers into ONE dispatch group: their output
     columns are concatenated into a single [K_pad, sum(N_i)] effective
@@ -183,12 +241,23 @@ def lower_fused(
     across columns, so fusing is bit-identical to the per-layer dispatches
     as long as all layers share the input encoding.  That holds under
     dynamic activation calibration (the default; the scale is recomputed
-    from the shared input at run time) - the fused plan stores the FIRST
-    layer's static ``a_scale``, so callers should not fuse statically
-    calibrated layers with differing scales.
+    from the shared input at run time).
+
+    Under ``act_calib == "static"`` the group shares ONE physical input
+    encoding, so differing per-layer scales need calibration support:
+    when every ``calibs[i]`` carries the group's shared ``a_scale_in``
+    (produced by :func:`repro.calib.routines.share_group_input_scale` -
+    the widest member scale, so no member's range is truncated), the
+    fused plan encodes AND dequantizes at that shared LSB - bit-exact vs
+    the same layers lowered per-layer from the same calibration (each
+    member plan also carries ``a_scale_in`` and resolves to the same
+    encoding).  Without such calibration, differing static scales still
+    raise (quantizing all-but-the-first layer's input with the wrong LSB
+    would be silent corruption).
     """
-    plans = [lower_layer(p, cfg, signed_input=signed_input)
-             for p in layer_params]
+    cs = list(calibs) if calibs is not None else [None] * len(layer_params)
+    plans = [lower_layer(p, cfg, signed_input=signed_input, calib=c)
+             for p, c in zip(layer_params, cs)]
     k = plans[0].k
     for lp in plans:
         if lp.k != k or lp.chunk_rows != plans[0].chunk_rows:
@@ -196,20 +265,43 @@ def lower_fused(
                 "fused layers must share the input dim and chunk geometry: "
                 f"{[(p.k, p.chunk_rows) for p in plans]}"
             )
+    a_scale = plans[0].a_scale
+    a_scale_in = None
     if cfg.act_calib == "static":
-        # the fused plan bakes ONE a_scale for the whole group; under
-        # static calibration differing per-layer scales would silently
-        # quantize all-but-the-first layer's input with the wrong LSB
-        try:
-            scales = [float(jax.numpy.asarray(lp.a_scale)) for lp in plans]
-        except jax.errors.ConcretizationTypeError:
-            scales = None          # traced lowering: cannot verify here
-        if scales is not None and any(s != scales[0] for s in scales):
-            raise ValueError(
-                "lower_fused with act_calib='static' requires identical "
-                f"a_scale across the fused layers, got {scales}; lower "
-                "them per-layer or recalibrate to a shared scale"
-            )
+        if all(lp.a_scale_in is not None for lp in plans):
+            # snapshot-calibrated group: encode AND dequantize the whole
+            # group at the shared input LSB (the executor always
+            # dequantizes at the LSB the codes were encoded with)
+            try:
+                ins = [float(jax.numpy.asarray(lp.a_scale_in))
+                       for lp in plans]
+            except jax.errors.ConcretizationTypeError:
+                ins = None         # traced lowering: cannot verify here
+            if ins is not None and any(s != ins[0] for s in ins):
+                raise ValueError(
+                    "fused layers carry differing shared input scales "
+                    f"a_scale_in={ins}; calibrate the group together "
+                    "(repro.calib.routines.share_group_input_scale)"
+                )
+            a_scale_in = plans[0].a_scale_in
+            a_scale = a_scale_in
+        else:
+            # the fused plan bakes ONE a_scale for the whole group; under
+            # static calibration differing per-layer scales would silently
+            # quantize all-but-the-first layer's input with the wrong LSB
+            try:
+                scales = [float(jax.numpy.asarray(lp.a_scale))
+                          for lp in plans]
+            except jax.errors.ConcretizationTypeError:
+                scales = None      # traced lowering: cannot verify here
+            if scales is not None and any(s != scales[0] for s in scales):
+                raise ValueError(
+                    "lower_fused with act_calib='static' requires "
+                    f"identical a_scale across the fused layers, got "
+                    f"{scales}; lower them per-layer, recalibrate to a "
+                    "shared scale, or calibrate the group "
+                    "(repro.calib.routines.share_group_input_scale)"
+                )
     n_tot = sum(lp.n for lp in plans)
     cat = lambda xs: jnp.concatenate(xs, axis=-1)
     chunk_off = None
@@ -237,7 +329,7 @@ def lower_fused(
     return LayerPlan(
         w_eff=cat([lp.w_eff for lp in plans]),
         w_scale=cat([lp.w_scale for lp in plans]),
-        a_scale=plans[0].a_scale,
+        a_scale=a_scale,
         gain=cat([jnp.broadcast_to(lp.gain, lp.w_eff.shape[:-2] + (lp.n,))
                   for lp in plans]),
         chunk_offset=chunk_off,
@@ -249,6 +341,7 @@ def lower_fused(
         signed_input=plans[0].signed_input,
         epilogue=EPILOGUE_NONE,
         shift=0,
+        a_scale_in=a_scale_in,
     )
 
 
@@ -364,6 +457,52 @@ def pack_megakernel(plan: AnalogPlan) -> Optional[MegakernelPack]:
         n_max=n_max,
         chunk_rows=layers[0].chunk_rows,
     )
+
+
+def layer_with_offsets(lp: LayerPlan, chunk_offset) -> LayerPlan:
+    """Swap ONE lowered layer's ADC offset table (drift refresh).
+
+    The swap touches only the ``chunk_offset`` leaf - weights, scales and
+    every static execution attribute are untouched, so the refreshed plan
+    has the identical treedef + aux data as the original and every jitted
+    replay hits its compiled cache (no recompilation).  Requires the plan
+    to already carry an offset table of the same shape (a plan lowered
+    without offsets has a different treedef; re-lower instead).
+    """
+    if lp.chunk_offset is None:
+        raise ValueError(
+            "cannot hot-swap offsets into a plan lowered without an "
+            "offset table (treedef would change); re-lower the layer"
+        )
+    chunk_offset = jnp.asarray(chunk_offset, jnp.float32)
+    if chunk_offset.shape != lp.chunk_offset.shape:
+        raise ValueError(
+            f"offset table shape {chunk_offset.shape} != baked "
+            f"{lp.chunk_offset.shape}"
+        )
+    return dataclasses.replace(lp, chunk_offset=chunk_offset)
+
+
+def plan_with_offsets(
+    plan: AnalogPlan, offsets: Sequence[Optional[jax.Array]]
+) -> AnalogPlan:
+    """Swap the per-layer ADC offset tables of a lowered stack
+    (:func:`layer_with_offsets` per layer; ``offsets[i] = None`` keeps
+    layer i's table).  The megakernel packing, when baked, is re-packed
+    from the swapped layers - its static schedule is unchanged, so
+    replays do not recompile."""
+    if len(offsets) != len(plan.layers):
+        raise ValueError(
+            f"{len(offsets)} offset tables for {len(plan.layers)} layers"
+        )
+    layers = tuple(
+        lp if off is None else layer_with_offsets(lp, off)
+        for lp, off in zip(plan.layers, offsets)
+    )
+    out = dataclasses.replace(plan, layers=layers)
+    if plan.mega is not None:
+        out = dataclasses.replace(out, mega=pack_megakernel(out))
+    return out
 
 
 def prelower_tree(params, cfg: AnalogConfig):

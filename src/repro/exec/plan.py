@@ -73,6 +73,13 @@ class LayerPlan:
       a_scale:      scalar static activation LSB (used when
                     ``act_calib == "static"``; dynamic calib recomputes
                     per call inside run()).
+      a_scale_in:   optional scalar: the SHARED static input LSB of a
+                    snapshot-calibrated fused dispatch group (the widest
+                    member scale, so no member's range is truncated).
+                    When set, static encoding - and the matching
+                    dequantization - use it instead of ``a_scale`` (the
+                    layer's own calibrated scale, kept for solo
+                    lowering).  None: plain layer (legacy behavior).
       gain:         scalar (or [N]) calibrated analog gain.
       chunk_offset: [C, N] fixed-pattern ADC offsets or None.
       colsum:       [N] column sums of w_eff (offset-encoding correction
@@ -104,6 +111,7 @@ class LayerPlan:
     epilogue: str = EPILOGUE_NONE
     shift: int = 0
     flatten_out: bool = False
+    a_scale_in: Optional[jax.Array] = None
 
     @property
     def n_chunks(self) -> int:
@@ -114,7 +122,7 @@ jax.tree_util.register_dataclass(
     LayerPlan,
     data_fields=[
         "w_eff", "w_scale", "a_scale", "gain", "chunk_offset", "colsum",
-        "bias",
+        "bias", "a_scale_in",
     ],
     meta_fields=[
         "k", "n", "chunk_rows", "signed_input", "epilogue", "shift",

@@ -106,7 +106,12 @@ def run_layer(
             jax.lax.stop_gradient(jnp.abs(x)).max() + 1e-9
         )
     else:
-        a_scale = lp.a_scale
+        # static calibration: a layer that belongs to a snapshot-
+        # calibrated fused group encodes at the group's SHARED input LSB
+        # (a_scale_in, the widest member scale) instead of its own
+        # calibrated a_scale; dequantization below always uses the LSB
+        # the codes were actually encoded at.
+        a_scale = lp.a_scale_in if lp.a_scale_in is not None else lp.a_scale
     gain = lp.gain
 
     signed = "none" if x_is_codes else lp.signed_input

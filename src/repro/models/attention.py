@@ -94,9 +94,12 @@ def attention_apply(params, x, *, positions, acfg: AnalogConfig, n_heads,
     if qkv_lp is not None and (
         qkv_lp.signed_input != acfg.signed_input
         or qkv_lp.chunk_rows != acfg.chunk_rows
-        # a fused plan stores ONE static a_scale (wq's): only valid when
-        # the call site recomputes the scale per call (dynamic calib)
-        or acfg.act_calib != "dynamic"
+        # under static calibration a fused plan is only valid when it was
+        # snapshot-calibrated as a group: one shared input LSB
+        # (a_scale_in) encodes AND dequantizes the group.  A dynamically-
+        # fused plan (one baked a_scale, wq's) would quantize k/v with
+        # the wrong static LSB.
+        or (acfg.act_calib != "dynamic" and qkv_lp.a_scale_in is None)
     ):
         qkv_lp = None        # baked attrs disagree with this call site
     if qkv_lp is not None:

@@ -353,7 +353,7 @@ class TestDeprecationShims:
         )
 
     def test_ecg_lower_warns_and_matches(self):
-        cfg = ECG.ECGConfig(noise=NoiseConfig())
+        cfg = ECG.ECGConfig()
         params = ECG.ecg_init(jax.random.PRNGKey(0), cfg)
         x = jnp.round(
             jax.random.uniform(jax.random.PRNGKey(1), (4, 2, 126)) * 31

@@ -82,6 +82,21 @@ class TestTable1:
         assert 4.5 < years < 6.5  # paper: "for five years"
 
 
+class TestPaperPins:
+    """Regression pins against the paper's MEASURED numbers as literals
+    (not via the BSS2 constants - if someone edits the constants or the
+    model, these fail loudly): one ECG inference takes 276 us and costs
+    192 uJ on the ASIC (Table 1)."""
+
+    def test_time_pin_276us(self):
+        t = SystemModel().report(ECG_LAYERS)["time_s"]
+        np.testing.assert_allclose(t, 276e-6, rtol=0.02)
+
+    def test_asic_energy_pin_192uJ(self):
+        e = SystemModel().report(ECG_LAYERS)["energy_asic_j"]
+        np.testing.assert_allclose(e, 192e-6, rtol=0.02)
+
+
 class TestPartitioner:
     def test_single_tile(self):
         g = plan_tiles(128, 512)

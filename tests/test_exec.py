@@ -293,7 +293,7 @@ class TestDispatchCounts:
 
 class TestECGPlanExecutor:
     def test_plan_matches_module_path(self):
-        cfg = ECG.ECGConfig(noise=NoiseConfig())
+        cfg = ECG.ECGConfig()
         params = ECG.ecg_init(jax.random.PRNGKey(0), cfg)
         x = jnp.round(
             jax.random.uniform(jax.random.PRNGKey(1), (4, 2, 126)) * 31
@@ -308,7 +308,7 @@ class TestECGPlanExecutor:
     def test_adc_chain_runs_in_code_domain(self):
         """relu_shift lowering: inter-layer activations are 5-bit codes;
         in-kernel fused epilogue == elementwise STE epilogue bit-exact."""
-        cfg = ECG.ECGConfig(noise=NoiseConfig())
+        cfg = ECG.ECGConfig()
         params = ECG.ecg_init(jax.random.PRNGKey(0), cfg)
         x = jnp.round(
             jax.random.uniform(jax.random.PRNGKey(1), (4, 2, 126)) * 31
