@@ -11,8 +11,9 @@ report.  ``PYTHONPATH=src python -m benchmarks.run [--full | --smoke]``
 
 ``--smoke`` runs the CI subset (kernel checks + the exec-layer and
 transformer-block plan-vs-percall throughputs + the megakernel-vs-
-per-layer code-domain chain + the calibrated-snapshot-vs-ideal-bake
-replay) and writes the numbers to BENCH_smoke.json.
+per-layer code-domain chain + the rwkv batch_concat and moe
+expert_stack fusion-group speedups + the calibrated-snapshot-vs-
+ideal-bake replay) and writes the numbers to BENCH_smoke.json.
 
 ``--full`` additionally trains the ECG CDNN through BOTH inter-layer
 chains (float glue vs code-domain relu_shift) and evaluates each on
@@ -84,6 +85,13 @@ def smoke() -> None:
               f"per-layer {e['per_layer_us']:.0f}us, "
               f"megakernel {e['megakernel_us']:.0f}us "
               f"({e['speedup']:.2f}x)")
+    rw = throughput.rwkv_fused_vs_solo(iters=5)
+    print("\n== rwkv r/k/v/g: batch_concat fusion group vs solo ==")
+    print(f"{rw['shape']}: dispatches={rw['dispatches']} "
+          f"fused {rw['speedup']:.2f}x")
+    mo = throughput.moe_prelowered_vs_percall(iters=5)
+    print("\n== moe experts: prelowered expert_stack vs per-call ==")
+    print(f"{mo['shape']}: prelowered {mo['speedup']:.2f}x")
     cal = throughput.calibrated_vs_ideal_replay(iters=5)
     print("\n== calibrated-snapshot vs ideal-bake plan replay ==")
     print(f"{cal['shape']}: ideal {cal['ideal_us']:.0f}us, "
@@ -93,7 +101,8 @@ def smoke() -> None:
           f"{cal['calibrate_us']/1e3:.0f}ms, "
           f"{cal['measurements']} measurements)")
     out = {"plan_vs_percall": pc, "transformer_block": tb,
-           "megakernel": mk, "calibrated_replay": cal,
+           "megakernel": mk, "rwkv_fused_vs_solo": rw,
+           "moe_prelowered_vs_percall": mo, "calibrated_replay": cal,
            "wall_s": time.time() - t0}
     with open("BENCH_smoke.json", "w") as f:
         json.dump(out, f, indent=2, default=float)
@@ -103,7 +112,9 @@ def smoke() -> None:
     # shapes are noisy on shared CI runners); the 4x512 chain entry is.
     floors = {"plan_vs_percall": pc["plan_speedup"],
               "transformer_block": tb["plan_speedup"],
-              "megakernel": mk["megakernel_speedup"]}
+              "megakernel": mk["megakernel_speedup"],
+              "rwkv_fused_vs_solo": rw["speedup"],
+              "moe_prelowered_vs_percall": mo["speedup"]}
     bad = {k: v for k, v in floors.items() if v < 1.0}
     if bad:
         print(f"FAIL: plan replay regressed below 1.0x vs per-call: {bad}")

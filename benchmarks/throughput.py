@@ -306,6 +306,119 @@ def megakernel_vs_per_layer_throughput(iters: int = 10) -> dict:
     return out
 
 
+def _best_of(f, *args, iters=10, warmup=3, blocks=4):
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(f(*args))
+    best = float("inf")
+    for _ in range(blocks):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(f(*args))
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best * 1e6
+
+
+def rwkv_fused_vs_solo(iters: int = 10) -> dict:
+    """RWKV r/k/v/g: batch_concat fusion group vs solo per-call (ISSUE 5).
+
+    The four time-mix projections of an RWKV-6 block on a decode-like
+    microbatch (the serve replay shape where compile-once matters),
+    executed two ways:
+
+    - ``solo``: raw params - four separate ``linear_apply`` calls, each
+      re-deriving weight codes / scales / offsets inside the traced
+      forward and issuing its own analog dispatch (4 total),
+    - ``fused``: the api front door - ``api.compile(rwkv_module_spec)``
+      bakes the four projections ONCE into a ``batch_concat`` GroupPlan
+      (disjoint column blocks of one array configuration) and the replay
+      streams all four token-shift mixes through a single dispatch
+      (4 -> 1, bit-exact vs solo - gated in tests).
+
+    The full-block forward is deliberately NOT the timed unit: the
+    sequential WKV recurrence is identical on both paths and would only
+    dilute the projection-stage signal this entry gates.
+    """
+    import jax
+
+    from repro import api
+    from repro.core.analog import AnalogConfig
+    from repro.exec.run import (
+        dispatch_count, reset_dispatch_count, run_batch_concat,
+    )
+    from repro.models import layers as L
+    from repro.models import rwkv as R
+
+    d, heads, b, s = 512, 4, 8, 4
+    names = ("wr", "wk", "wv", "wg")
+    params = R.rwkv_init(jax.random.PRNGKey(0), d, heads)
+    acfg = AnalogConfig()
+    gp = api.compile(
+        R.rwkv_module_spec(d, heads), params, acfg
+    ).group_plan("rkvg")
+    xs = tuple(
+        jax.random.normal(jax.random.PRNGKey(i), (b, s, d)) * 0.3
+        for i in range(4)
+    )
+
+    def solo(p, xs):
+        return [L.linear_apply(p[n], x, acfg)
+                for n, x in zip(names, xs)]
+
+    def fused(g, xs):
+        return run_batch_concat(g, xs, acfg)
+
+    out = {"shape": f"rwkv r/k/v/g d={d} x[{b}x{s}x{d}]", "dispatches": {}}
+    for name, f, a in (("solo", solo, params), ("fused", fused, gp)):
+        reset_dispatch_count()
+        f(a, xs)
+        out["dispatches"][name] = dispatch_count()
+        out[f"{name}_us"] = _best_of(jax.jit(f), a, xs, iters=iters)
+    out["speedup"] = out["solo_us"] / out["fused_us"]
+    return out
+
+
+def moe_prelowered_vs_percall(iters: int = 10) -> dict:
+    """MoE experts: expert_stack plans vs per-call lowering (ISSUE 5).
+
+    One MoE layer (top-k routed dispatch) in analog mode, executed two
+    ways over the SAME routing path:
+
+    - ``percall``: raw params - every traced forward re-derives weight
+      codes, per-expert column scales and statistical gains for all
+      expert matrices (O(E*K*N) lowering work inside the executable),
+    - ``prelowered``: the api front door - ``api.compile(
+      moe_module_spec)`` lowers each expert stack ONCE at compile time;
+      the jitted forward replays the baked plans (zero lowering work per
+      call - trace-count-gated in tests; bit-exact by construction).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro import api
+    from repro.core.analog import AnalogConfig
+    from repro.models import moe as M
+
+    d, ff, e, top_k, b, s = 256, 512, 8, 2, 4, 32
+    params = M.moe_init(jax.random.PRNGKey(0), d, ff, e)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d)) * 0.3
+    acfg = AnalogConfig()
+    model = api.compile(
+        M.moe_module_spec(d, ff, e, top_k=top_k), params, acfg
+    )
+    lowered = model.lower()
+
+    def fwd(p, x):
+        return M.moe_apply(p, x, acfg=acfg, top_k=top_k)[0]
+
+    out = {"shape": f"moe d={d} ff={ff} E={e} top{top_k} x[{b}x{s}x{d}]"}
+    for name, p in (("percall", params), ("prelowered", lowered)):
+        out[f"{name}_us"] = _best_of(jax.jit(fwd), p, x, iters=iters)
+    out["speedup"] = out["percall_us"] / out["prelowered_us"]
+    return out
+
+
 def calibrated_vs_ideal_replay(iters: int = 10) -> dict:
     """Calibrated-snapshot plan replay vs ideal-bake replay (ISSUE 4).
 

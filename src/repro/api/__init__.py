@@ -4,6 +4,7 @@
     model = api.compile(spec, params, run_cfg)  # -> CompiledModel
     y     = model.apply(x)                      # run
     plan  = model.lower()                       # replayable artifact
+    gp    = model.group_plan("qkv")             # a fused dispatch group
     axes  = model.sharding_specs()              # mesh-shardable, plans incl.
 
 ``compile()`` is the only non-deprecated way to obtain an executable
@@ -20,6 +21,7 @@ from repro.api.compile import (  # noqa: F401
     tree_spec,
 )
 from repro.api.module import (  # noqa: F401
+    GroupSpec,
     LayerSpec,
     ModuleSpec,
     linear_spec,

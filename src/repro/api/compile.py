@@ -10,10 +10,20 @@ used to be reachable through four scattered entrypoints
   :func:`repro.exec.lower.lower_stack`,
 - tree specs pre-lower every analog layer *in place* in the params pytree
   (``"_plan"`` entries), including layers stacked for ``jax.lax.scan``
-  (lowering is vmapped over the stack axis - the legacy ``prelower_tree``
-  skipped those entirely), and fuse same-input dispatch groups (attention
-  QKV) into ONE analog pass via ``"_qkv_plan"`` entries
-  (:func:`repro.exec.lower.lower_fused`).
+  (lowering is vmapped over the stack axis), and lower every declared
+  fusion group (:class:`repro.api.module.GroupSpec`) into a
+  :class:`~repro.exec.plan.GroupPlan` under the members' parent node
+  (``"_groups"`` entries) - ONE analog dispatch per group where the
+  per-layer path issued N.
+
+Fusion is planned purely from the spec's ``groups`` declarations (ISSUE
+5); the old ``_is_qkv_group`` structural heuristic is gone.  Bare params
+trees without a spec (``api.lower_tree(params, cfg)``) get their
+declaration derived first by the same walk :func:`tree_spec` uses - the
+derivation lives on the declaration side, the lowering only consumes
+GroupSpecs.  The fused attention plan is additionally aliased under the
+legacy ``"_qkv_plan"`` key (same object; deprecated - use
+``CompiledModel.group_plan(name)``).
 
 The lowering is built from STE quantizers end to end, so calling
 ``compile`` *inside* a differentiated function reproduces the HIL training
@@ -31,19 +41,43 @@ layers without an entry keep the oracle bake.
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional, Tuple
+from typing import Iterator, Optional, Sequence, Tuple
 
 import jax
 
 from repro.core.analog import AnalogConfig
-from repro.exec.lower import lower_fused, lower_layer, lower_stack
-from repro.api.module import STACK, TREE, LayerSpec, ModuleSpec
+from repro.exec.lower import (
+    lower_batch_concat,
+    lower_expert_stack,
+    lower_fused,
+    lower_layer,
+    lower_stack,
+)
+from repro.exec.plan import (
+    GROUP_BATCH_CONCAT,
+    GROUP_COLUMN_CONCAT,
+    GROUP_EXPERT_STACK,
+    GroupPlan,
+)
+from repro.api.module import (
+    STACK,
+    TREE,
+    GroupSpec,
+    LayerSpec,
+    ModuleSpec,
+    group_parent,
+)
 from repro.api.program import CompiledModel
 
-# the attention dispatch group: same post-norm input, fused columns
-_QKV = ("wq", "wk", "wv")
-_QKV_PLAN = "_qkv_plan"
+# lowered-tree entry keys.  _GROUPS is the canonical fusion-group store
+# ({local group name -> GroupPlan} at the members' parent node);
+# _QKV_PLAN is the legacy attention alias (the qkv GroupPlan's fused
+# LayerPlan, same object) kept as a bit-exact deprecation shim.
 _PLAN = "_plan"
+_GROUPS = "_groups"
+_QKV_PLAN = "_qkv_plan"
+_QKV_MEMBERS = ("wq", "wk", "wv")
+_RKVG_MEMBERS = ("wr", "wk", "wv", "wg")
 
 
 def _acfg(run_cfg) -> AnalogConfig:
@@ -54,23 +88,13 @@ def _acfg(run_cfg) -> AnalogConfig:
 def _is_analog_layer(node) -> bool:
     """An analog linear's parameter dict - 2-D, or 3-D when stacked with a
     leading scan axis (vmapped init).  Raw stacked arrays (MoE experts)
-    are NOT layer dicts and keep their per-call lowering."""
+    are NOT layer dicts; they lower only through a declared
+    ``expert_stack`` group."""
     return (
         isinstance(node, dict)
         and "w" in node and "w_scale" in node and "gain" in node
         and getattr(node["w"], "ndim", 0) in (2, 3)
     )
-
-
-def _is_qkv_group(node: dict) -> bool:
-    """Same-input attention projections: fuse into one dispatch group.
-    (RWKV's wr/wk/wv/wg each consume a different token-shift mix, so the
-    mere presence of wk/wv does not qualify - the wq key is the marker.)"""
-    if not all(k in node and _is_analog_layer(node[k]) for k in _QKV):
-        return False
-    dims = {node[k]["w"].ndim for k in _QKV}
-    kdims = {node[k]["w"].shape[-2] for k in _QKV}
-    return len(dims) == 1 and len(kdims) == 1
 
 
 def _lower_leaf(node: dict, acfg: AnalogConfig, calib=None):
@@ -82,21 +106,15 @@ def _lower_leaf(node: dict, acfg: AnalogConfig, calib=None):
     return lower_layer(node, acfg, calib=calib)
 
 
-def _lower_qkv(node: dict, acfg: AnalogConfig, calibs=None):
-    qkv = [node[k] for k in _QKV]
-    if node["wq"]["w"].ndim == 3:
-        return jax.vmap(lambda q, k, v: lower_fused([q, k, v], acfg))(*qkv)
-    return lower_fused(qkv, acfg, calibs=calibs)
-
-
-def _group_calibs(calibration, path: str):
-    """The QKV group's member calibrations ([wq, wk, wv] order) when the
-    snapshot group-calibrated ALL of them (shared ``a_scale_in``), else
-    None.  A partial/ungrouped snapshot must not unlock static fusion."""
+def _member_calibs(calibration, parent: str, locals_: Sequence[str]):
+    """The group members' calibration records (member order) when the
+    snapshot covers ALL of them, else None.  A partial snapshot must not
+    change how a group lowers."""
     if calibration is None:
         return None
     calibs = [
-        calibration.layer(f"{path}.{k}" if path else k) for k in _QKV
+        calibration.layer(f"{parent}.{m}" if parent else m)
+        for m in locals_
     ]
     if any(c is None for c in calibs):
         return None
@@ -104,27 +122,162 @@ def _group_calibs(calibration, path: str):
 
 
 def _static_fusable(calibs) -> bool:
+    """column_concat under static activation calibration needs the
+    group's shared input LSB (``a_scale_in``) on every member - produced
+    by :func:`repro.calib.routines.share_group_input_scale`."""
     return calibs is not None and all(
         c.a_scale_in is not None for c in calibs
     )
 
 
+# --------------------------------------------------------------------------
+# declaration derivation for bare params trees (the tree_spec walk)
+# --------------------------------------------------------------------------
+def _derive_groups(params) -> Tuple[GroupSpec, ...]:
+    """Derive the fusion-group declaration of a bare params tree - the
+    same structural walk :func:`tree_spec` records, used when
+    ``lower_tree`` is handed params without a spec:
+
+    - attention wq/wk/wv triples (same input dim, same stack rank) ->
+      one ``column_concat`` group per attention node,
+    - RWKV wr/wk/wv/wg quads (same weight geometry) -> one
+      ``batch_concat`` group per time-mix node.
+
+    Expert stacks are never derived structurally (a raw 3-D array is not
+    self-describing); declare them via :func:`repro.models.moe.
+    moe_module_spec`.
+    """
+    groups = []
+
+    def siblings(node, names):
+        if not all(
+            _is_analog_layer(node.get(m)) for m in names
+        ):
+            return None
+        ms = [node[m] for m in names]
+        if len({m["w"].ndim for m in ms}) != 1:
+            return None
+        return ms
+
+    def walk(node, path):
+        if _is_analog_layer(node) or not isinstance(
+            node, (dict, list, tuple)
+        ):
+            return
+        if isinstance(node, dict):
+            prefix = ".".join(path + [""]) if path else ""
+            qkv = siblings(node, _QKV_MEMBERS)
+            if qkv is not None and len(
+                {m["w"].shape[-2] for m in qkv}
+            ) == 1:
+                groups.append(GroupSpec(
+                    name=prefix + "qkv", kind=GROUP_COLUMN_CONCAT,
+                    members=tuple(prefix + m for m in _QKV_MEMBERS),
+                ))
+            rkvg = siblings(node, _RKVG_MEMBERS)
+            if rkvg is not None and len(
+                {m["w"].shape[-2:] for m in rkvg}
+            ) == 1:
+                groups.append(GroupSpec(
+                    name=prefix + "rkvg", kind=GROUP_BATCH_CONCAT,
+                    members=tuple(prefix + m for m in _RKVG_MEMBERS),
+                ))
+            for k, v in node.items():
+                walk(v, path + [k])
+        else:
+            for i, v in enumerate(node):
+                walk(v, path + [str(i)])
+
+    walk(params, [])
+    return tuple(groups)
+
+
+# --------------------------------------------------------------------------
+# tree lowering (spec-driven fusion)
+# --------------------------------------------------------------------------
+def _lower_group(
+    g: GroupSpec,
+    locals_: Sequence[str],
+    node: dict,
+    acfg: AnalogConfig,
+    calibration,
+    parent: str,
+) -> Optional[GroupPlan]:
+    """Lower one declared fusion group at its parent node, or None when
+    the group cannot fuse under this config (column_concat under static
+    activation calibration without a group-calibrated shared input LSB -
+    the members then keep their per-layer plans)."""
+    members = [node[m] for m in locals_]
+    calibs = _member_calibs(calibration, parent, locals_)
+    if g.kind == GROUP_COLUMN_CONCAT:
+        # fusion assumes one shared input quantization: always sound
+        # under dynamic calibration (scale recomputed from the shared
+        # input per call); under static calibration only for snapshot-
+        # calibrated groups (shared a_scale_in: one encoding LSB)
+        if acfg.act_calib != "dynamic" and not _static_fusable(calibs):
+            return None
+        if members[0]["w"].ndim == 3:
+            fused = jax.vmap(
+                lambda *ms: lower_fused(list(ms), acfg)
+            )(*members)
+        else:
+            fused = lower_fused(members, acfg, calibs=calibs)
+    elif g.kind == GROUP_BATCH_CONCAT:
+        fused = lower_batch_concat(members, acfg, calibs=calibs)
+    elif g.kind == GROUP_EXPERT_STACK:
+        arr = members[0]
+        if getattr(arr, "ndim", 0) != 3:
+            return None      # scan-stacked expert arrays: per-call path
+        fused = lower_expert_stack(arr, acfg)
+    else:      # pragma: no cover - GroupSpec validation rejects this
+        raise ValueError(f"unknown group kind {g.kind!r}")
+    return GroupPlan(
+        kind=g.kind,
+        fused=fused,
+        member_names=tuple(locals_),
+        member_ns=tuple(
+            int(m.shape[-1]) if not isinstance(m, dict)
+            else int(m["w"].shape[-1]) for m in members
+        ),
+    )
+
+
+def _qkv_alias(gplans: dict) -> Optional[GroupPlan]:
+    """The group the legacy ``"_qkv_plan"`` key aliases: a column_concat
+    group over exactly the wq/wk/wv members."""
+    for gp in gplans.values():
+        if (gp.kind == GROUP_COLUMN_CONCAT
+                and gp.member_names == _QKV_MEMBERS):
+            return gp
+    return None
+
+
 def lower_tree(params, run_cfg, *, fuse_groups: bool = True,
-               calibration=None):
+               calibration=None, groups: Optional[Sequence] = None):
     """Pre-lower every analog layer in a params pytree (the successor of
     ``exec.lower.prelower_tree``): each analog-layer dict gains a
-    ``"_plan"`` entry, attention dicts gain a fused ``"_qkv_plan"`` (one
-    dispatch for the three projections; their per-layer plans are elided),
-    and scan-stacked layer dicts are lowered under vmap so the plans flow
-    through ``jax.lax.scan`` with the stacked params.
+    ``"_plan"`` entry; every fusion group lowers into a
+    :class:`~repro.exec.plan.GroupPlan` stored in the members' parent
+    node's ``"_groups"`` dict (one dispatch for the whole group; fused
+    analog-dict members' per-layer plans are elided); scan-stacked layer
+    dicts are lowered under vmap so the plans flow through
+    ``jax.lax.scan`` with the stacked params.
+
+    ``groups`` is the fusion declaration (``spec.groups`` when called
+    through :func:`compile`); None derives it from the params structure
+    (:func:`_derive_groups` - the same walk :func:`tree_spec` records).
+    A fused attention group is additionally aliased under the legacy
+    ``"_qkv_plan"`` key (same fused LayerPlan object) as a bit-exact
+    deprecation shim.
 
     ``calibration`` (a CalibrationSnapshot keyed by dotted params path)
     replaces the oracle fixed-pattern bake with measured tables where an
-    entry exists - and UNLOCKS fused dispatch groups under static
+    entry exists - and UNLOCKS column_concat groups under static
     activation calibration: a group whose members the snapshot calibrated
     together (shared ``a_scale_in``) quantizes once at the shared LSB and
     dequantizes per column, so it no longer needs dynamic calibration to
-    share one input encoding.
+    share one input encoding.  ``batch_concat`` groups fuse under both
+    calibration modes (each member keeps its own input encoding).
 
     Returns the params tree unchanged in digital mode.  Inference
     contract: gradients taken *through* a pre-built tree stop at the baked
@@ -134,11 +287,12 @@ def lower_tree(params, run_cfg, *, fuse_groups: bool = True,
     acfg = _acfg(run_cfg)
     if acfg.mode == "digital":
         return params
-    # fusion assumes one shared input quantization: always sound under
-    # dynamic calibration (scale recomputed from the shared input per
-    # call); under static calibration only for snapshot-calibrated
-    # groups (shared a_scale_in: one encoding LSB for the group)
-    dyn = acfg.act_calib == "dynamic"
+    if groups is None:
+        groups = _derive_groups(params)
+    by_parent: dict = {}
+    for g in groups:
+        parent, locals_ = group_parent(g)
+        by_parent.setdefault(parent, []).append((g, locals_))
 
     def lookup(path):
         return calibration.layer(path) if calibration is not None else None
@@ -150,16 +304,33 @@ def lower_tree(params, run_cfg, *, fuse_groups: bool = True,
             out[_PLAN] = _lower_leaf(node, acfg, calib=lookup(joined))
             return out
         if isinstance(node, dict):
-            fused = qkv_calibs = None
-            if fuse_groups and _is_qkv_group(node):
-                qkv_calibs = _group_calibs(calibration, joined)
-                fused = dyn or _static_fusable(qkv_calibs)
+            gplans: dict = {}
+            fused_members: set = set()
+            if fuse_groups:
+                for g, locals_ in by_parent.get(joined, ()):
+                    missing = [m for m in locals_ if m not in node]
+                    if missing:
+                        raise ValueError(
+                            f"group {g.name!r}: members {missing} not "
+                            f"found under params node {joined or '<root>'!r}"
+                        )
+                    gp = _lower_group(
+                        g, locals_, node, acfg, calibration, joined
+                    )
+                    if gp is None:
+                        continue
+                    gplans[g.local_name] = gp
+                    if g.kind != GROUP_EXPERT_STACK:
+                        fused_members.update(locals_)
             out = {}
             for k, v in node.items():
-                out[k] = dict(v) if fused and k in _QKV \
+                out[k] = dict(v) if k in fused_members \
                     else walk(v, path + [k])
-            if fused:
-                out[_QKV_PLAN] = _lower_qkv(node, acfg, calibs=qkv_calibs)
+            if gplans:
+                out[_GROUPS] = gplans
+                qkv = _qkv_alias(gplans)
+                if qkv is not None:
+                    out[_QKV_PLAN] = qkv.fused
             return out
         if isinstance(node, (list, tuple)):
             return type(node)(
@@ -191,35 +362,38 @@ def iter_analog_layers(params) -> Iterator[Tuple[str, dict]]:
 def tree_spec(name: str, params, *, param_axes=None, apply_fn=None,
               axes_of=None) -> ModuleSpec:
     """Build a tree-kind :class:`ModuleSpec` by walking a params pytree
-    (concrete or abstract): one :class:`LayerSpec` per analog layer, with
-    attention QKV triples marked as a shared dispatch ``group``.
+    (concrete or abstract): one :class:`LayerSpec` per analog layer, plus
+    the derived fusion groups (attention QKV triples -> ``column_concat``,
+    RWKV r/k/v/g quads -> ``batch_concat`` - see :func:`_derive_groups`).
     ``axes_of(path) -> (in_name, out_name)`` supplies sharding axes.
 
     Contract note: for tree specs the layer list is *descriptive* - the
     declaration is derived from the params structure by the same walk
     :func:`lower_tree` lowers with, so the two cannot disagree; it exists
-    for introspection (``spec.layer(path)``, docs, tests).  Lowering and
-    sharding of tree models are driven by the structure + ``param_axes``,
-    not by editing individual LayerSpecs (stack specs, by contrast, are
-    compiled field-by-field from their declarations)."""
+    for introspection (``spec.layer(path)``, docs, tests).  The GROUPS
+    tuple, by contrast, is authoritative: :func:`compile` passes
+    ``spec.groups`` into the lowering, so a hand-authored spec fully
+    controls fusion (no structural heuristic runs at compile time)."""
+    groups = _derive_groups(params)
+    member_group = {}
+    for g in groups:
+        for m in g.members:
+            member_group[m] = g.name
     layers = []
     for path, node in iter_analog_layers(params):
         w = node["w"]
         stacked = w.shape[0] if w.ndim == 3 else 0
-        group = None
-        leaf = path.rsplit(".", 1)[-1]
-        if leaf in _QKV:
-            group = path.rsplit(".", 1)[0] + ".qkv" if "." in path else "qkv"
         layers.append(LayerSpec(
             name=path,
             in_dim=int(w.shape[-2]),
             out_dim=int(w.shape[-1]),
             sharding=axes_of(path) if axes_of else (None, None),
-            group=group,
+            group=member_group.get(path),
             stacked=stacked,
         ))
     return ModuleSpec(name=name, layers=tuple(layers), kind=TREE,
-                      apply_fn=apply_fn, param_axes=param_axes)
+                      apply_fn=apply_fn, param_axes=param_axes,
+                      groups=groups)
 
 
 def _compile_stack(spec: ModuleSpec, params, acfg: AnalogConfig,
@@ -266,7 +440,8 @@ def compile(spec: ModuleSpec, params, run_cfg, *,  # noqa: A001
     ``run_cfg`` is a RunConfig (serve/train) or bare AnalogConfig.  In
     digital mode no plans are built and ``apply`` runs the digital
     reference path; otherwise every analog layer is lowered exactly once
-    (stack -> one AnalogPlan; tree -> plan entries beside the params).
+    (stack -> one AnalogPlan; tree -> plan entries beside the params,
+    fusion groups planned from ``spec.groups``).
     ``calibration`` (a ``repro.calib`` CalibrationSnapshot) bakes
     measured gain/offset/scale tables in place of the oracle
     ``params["fpn"]`` - see the module docstring.
@@ -277,29 +452,68 @@ def compile(spec: ModuleSpec, params, run_cfg, *,  # noqa: A001
             spec, params, acfg, calibration
         )
     elif spec.kind == TREE:
-        lowered = lower_tree(params, acfg, calibration=calibration)
+        lowered = lower_tree(params, acfg, calibration=calibration,
+                             groups=spec.groups)
     else:
         raise ValueError(f"unknown spec kind {spec.kind!r}")
     return CompiledModel(spec=spec, params=params, run_cfg=run_cfg,
                          lowered=lowered, calibration=calibration)
 
 
+def _swap_group(gp: GroupPlan, snapshot, parent: str):
+    """Drift-refresh one GroupPlan: swap the fused plan's offset table
+    when the snapshot covers every member.  column_concat tables
+    concatenate along columns, batch_concat tables stack along the member
+    axis; expert_stack plans have no per-member device (nothing measured)
+    and scan-stacked group plans have no single device either - both are
+    returned untouched."""
+    import jax.numpy as jnp
+
+    from repro.exec.lower import layer_with_offsets
+
+    if gp.kind == GROUP_EXPERT_STACK or gp.fused.chunk_offset is None:
+        return gp
+    recs = [
+        snapshot.layer(f"{parent}.{m}" if parent else m)
+        for m in gp.member_names
+    ]
+    if any(r is None or r.chunk_offset is None for r in recs):
+        return gp
+    tables = [jnp.asarray(r.chunk_offset, jnp.float32) for r in recs]
+    if gp.kind == GROUP_COLUMN_CONCAT:
+        off = jnp.concatenate(tables, axis=-1)
+    else:
+        off = jnp.stack(tables, axis=0)
+    if off.shape != gp.fused.chunk_offset.shape:
+        return gp            # scan-stacked group plans: no single device
+    import dataclasses
+
+    return dataclasses.replace(
+        gp, fused=layer_with_offsets(gp.fused, off)
+    )
+
+
 def swap_calibration(lowered, snapshot, *, path: str = ""):
     """Hot-swap refreshed OFFSET tables into a pre-lowered params tree
-    (the drift-refresh path): every ``"_plan"`` / ``"_qkv_plan"`` entry
-    whose layer(s) the snapshot covers gets its ``chunk_offset`` leaf
-    replaced; weights, gains, scales and all static metadata are kept, so
-    the result has the identical treedef and jitted serve steps keep
-    their compiled executables.  Layers the snapshot does not cover (and
-    scan-stacked plans, which have no single device) are untouched.
+    (the drift-refresh path): every ``"_plan"`` entry and every
+    ``"_groups"`` GroupPlan whose layer(s) the snapshot covers gets its
+    ``chunk_offset`` leaf replaced; weights, gains, scales and all static
+    metadata are kept, so the result has the identical treedef and jitted
+    serve steps keep their compiled executables.  All three group kinds
+    are walked: column_concat and batch_concat swap their members'
+    measured tables in (concatenated / member-stacked); expert_stack
+    groups have no measured device and are kept.  The legacy
+    ``"_qkv_plan"`` alias is re-pointed at the swapped group's fused
+    plan.  Layers the snapshot does not cover (and scan-stacked plans,
+    which have no single device) are untouched.
     """
     import jax.numpy as jnp
 
     from repro.exec.lower import layer_with_offsets
 
-    def qkv_offsets(p: str):
+    def legacy_qkv_offsets(p: str):
         offs = []
-        for k in _QKV:
+        for k in _QKV_MEMBERS:
             rec = snapshot.layer(f"{p}.{k}" if p else k)
             if rec is None or rec.chunk_offset is None:
                 return None
@@ -322,13 +536,25 @@ def swap_calibration(lowered, snapshot, *, path: str = ""):
                     rec is None or rec.chunk_offset is None
                     or getattr(v.w_eff, "ndim", 2) != 2
                 ) else layer_with_offsets(v, rec.chunk_offset)
+            elif k == _GROUPS:
+                out[k] = {
+                    name: _swap_group(gp, snapshot, p)
+                    for name, gp in v.items()
+                }
             elif k == _QKV_PLAN:
-                off = qkv_offsets(p)
-                out[k] = v if (
-                    off is None or getattr(v.w_eff, "ndim", 2) != 2
-                ) else layer_with_offsets(v, off)
+                continue          # aliased from the swapped group below
             else:
                 out[k] = walk(v, f"{p}.{k}" if p else k)
+        if _QKV_PLAN in node:
+            qkv = _qkv_alias(out.get(_GROUPS, {}))
+            if qkv is not None:
+                out[_QKV_PLAN] = qkv.fused
+            else:                 # legacy tree without a _groups entry
+                off = legacy_qkv_offsets(p)
+                v = node[_QKV_PLAN]
+                out[_QKV_PLAN] = v if (
+                    off is None or getattr(v.w_eff, "ndim", 2) != 2
+                ) else layer_with_offsets(v, off)
         return out
 
     return walk(lowered, path)

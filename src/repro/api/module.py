@@ -3,9 +3,10 @@ front door (Spilger et al. 2020 expose analog layers as ordinary modules;
 the configuration step is derived from the declaration, not hand-wired).
 
 A :class:`ModuleSpec` names every analog layer of a model exactly once -
-name, in/out dims, inter-layer epilogue, logical sharding axes, and the
-fusion ``group`` it dispatches with - and :func:`repro.api.compile` turns
-(spec, params, run_cfg) into a :class:`repro.api.program.CompiledModel`.
+name, in/out dims, inter-layer epilogue, logical sharding axes - plus the
+model's fusion :class:`GroupSpec` declarations, and
+:func:`repro.api.compile` turns (spec, params, run_cfg) into a
+:class:`repro.api.program.CompiledModel`.
 
 Two spec kinds cover every model in this repo:
 
@@ -15,11 +16,36 @@ Two spec kinds cover every model in this repo:
   (attention softmax, recurrences, routing stay digital).  The spec lists
   them by dotted path into the params pytree; compile() bakes a plan next
   to each layer's parameters and the host program replays them.
+
+Fusion groups (tree specs) are first-class: a :class:`GroupSpec` names the
+layers that replay as ONE analog dispatch and HOW they fuse (paper §II-D:
+fill the 256x512 array per dispatch, columns run in parallel):
+
+- ``"column_concat"``: same input, concatenated output columns - the
+  attention QKV fusion (one [K, sum(N_i)] pass).
+- ``"batch_concat"``: same weight geometry, different inputs - the RWKV
+  r/k/v/g fusion (member matrices on disjoint column blocks of one array
+  config; every member's input batch streams through in the same pass).
+- ``"expert_stack"``: a stacked [E, K, N] expert weight array (MoE),
+  lowered once at compile time into a per-expert plan replayed by the
+  einsum dispatch path.
+
+Group declarations are validated at spec construction (unknown kinds,
+unknown members, mismatched member geometry all raise ``ValueError`` here,
+not deep inside lowering).  ``repro.api.compile`` plans fusion purely from
+these declarations - there is no structural heuristic in the lowering.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Callable, Optional, Tuple
+
+from repro.exec.plan import (
+    GROUP_BATCH_CONCAT,
+    GROUP_COLUMN_CONCAT,
+    GROUP_EXPERT_STACK,
+    GROUP_KINDS,
+)
 
 STACK = "stack"
 TREE = "tree"
@@ -38,9 +64,10 @@ class LayerSpec:
                   glue | "relu_shift" code-domain chain).
     flatten_out:  flatten trailing output dims before the next layer.
     sharding:     logical axis names of the (in, out) weight dims.
-    group:        fusion group id - layers sharing a group (and their
-                  input) lower into ONE dispatch over concatenated output
-                  columns (the QKV fusion).
+    group:        name of the :class:`GroupSpec` this layer dispatches
+                  with, or None.  A tag without a matching declared
+                  GroupSpec implies a ``column_concat`` group of the
+                  layers sharing it (the legacy QKV convention).
     stacked:      leading scan-stack size (0 = plain 2-D layer).
     """
 
@@ -53,6 +80,117 @@ class LayerSpec:
     sharding: Tuple[Optional[str], Optional[str]] = (None, None)
     group: Optional[str] = None
     stacked: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """One fusion group: the members that replay as ONE analog dispatch.
+
+    name:    group name.  For tree specs the dotted prefix locates the
+             group (e.g. "layers.l0.attn.qkv"); the last segment is the
+             group's local name at its parent params node.
+    kind:    "column_concat" | "batch_concat" | "expert_stack" (see the
+             module docstring).
+    members: ordered member layer names (each must be declared in the
+             spec's ``layers`` and all must be siblings - direct children
+             of one params node).
+    """
+
+    name: str
+    kind: str
+    members: Tuple[str, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "members", tuple(self.members))
+
+    @property
+    def local_name(self) -> str:
+        """The group's key inside its parent node's ``"_groups"`` dict."""
+        return self.name.rsplit(".", 1)[-1]
+
+
+def _parent_of(path: str) -> str:
+    return path.rsplit(".", 1)[0] if "." in path else ""
+
+
+def _local_of(path: str) -> str:
+    return path.rsplit(".", 1)[-1]
+
+
+def group_parent(g: GroupSpec) -> Tuple[str, Tuple[str, ...]]:
+    """(parent dotted path, local member names) of a validated group."""
+    return _parent_of(g.members[0]), tuple(
+        _local_of(m) for m in g.members
+    )
+
+
+def _validate_group(g: GroupSpec, by_name: dict, spec_name: str) -> None:
+    where = f"spec {spec_name!r} group {g.name!r}"
+    if g.kind not in GROUP_KINDS:
+        raise ValueError(
+            f"{where}: unknown kind {g.kind!r}; valid kinds: "
+            f"{', '.join(GROUP_KINDS)}"
+        )
+    if not g.members:
+        raise ValueError(f"{where}: a group needs at least one member")
+    missing = [m for m in g.members if m not in by_name]
+    if missing:
+        raise ValueError(
+            f"{where}: members {missing} are not declared layers; "
+            f"declared: {', '.join(by_name) or '(none)'}"
+        )
+    if len(set(g.members)) != len(g.members):
+        raise ValueError(f"{where}: duplicate members {g.members}")
+    parents = {_parent_of(m) for m in g.members}
+    if len(parents) != 1:
+        raise ValueError(
+            f"{where}: members must be siblings (direct children of one "
+            f"params node); got parents {sorted(parents)}"
+        )
+    ls = [by_name[m] for m in g.members]
+    epi = {l.epilogue for l in ls}
+    if epi != {"none"}:
+        raise ValueError(
+            f"{where}: fused members hand off dequantized floats and "
+            f"cannot carry a code-domain epilogue; got epilogues "
+            f"{sorted(epi)}"
+        )
+    if len({l.signed_input for l in ls}) != 1:
+        raise ValueError(
+            f"{where}: members must share one input encoding; got "
+            f"signed_input {[l.signed_input for l in ls]}"
+        )
+    if len({l.stacked for l in ls}) != 1:
+        raise ValueError(
+            f"{where}: members must share the scan-stack size; got "
+            f"{[(l.name, l.stacked) for l in ls]}"
+        )
+    if g.kind == GROUP_COLUMN_CONCAT:
+        if len({l.in_dim for l in ls}) != 1:
+            raise ValueError(
+                f"{where}: column_concat members share ONE physical "
+                f"input and must agree on in_dim; got "
+                f"{[(l.name, l.in_dim) for l in ls]}"
+            )
+    elif g.kind == GROUP_BATCH_CONCAT:
+        dims = {(l.in_dim, l.out_dim) for l in ls}
+        if len(dims) != 1:
+            raise ValueError(
+                f"{where}: batch_concat members must share the weight "
+                f"geometry (in_dim, out_dim); got "
+                f"{[(l.name, l.in_dim, l.out_dim) for l in ls]}"
+            )
+    elif g.kind == GROUP_EXPERT_STACK:
+        if len(g.members) != 1:
+            raise ValueError(
+                f"{where}: declare one expert_stack group per stacked "
+                f"weight array; got members {g.members}"
+            )
+        if ls[0].stacked <= 0:
+            raise ValueError(
+                f"{where}: expert_stack member {ls[0].name!r} must be a "
+                f"stacked [E, K, N] weight (LayerSpec.stacked > 0)"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +208,12 @@ class ModuleSpec:
     inference from the first layer's epilogue.  It is baked into the
     lowered AnalogPlan, so the executor never guesses from layer 0's
     *output* hand-off (which mis-classifies mixed chains).
+
+    ``groups`` declares the fusion groups (tree kind; validated here -
+    see the module docstring).  Legacy per-layer ``group`` tags without a
+    matching declared GroupSpec are normalized into ``column_concat``
+    groups at construction, so ``spec.groups`` is always the complete,
+    immutable fusion declaration ``repro.api.compile`` plans from.
     """
 
     name: str
@@ -78,12 +222,62 @@ class ModuleSpec:
     apply_fn: Optional[Callable] = None
     param_axes: Any = None
     input_domain: Optional[str] = None
+    groups: Tuple[GroupSpec, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "layers", tuple(self.layers))
+        by_name = {l.name: l for l in self.layers}
+        if len(by_name) != len(self.layers):
+            raise ValueError(
+                f"spec {self.name!r}: duplicate layer names in "
+                f"{[l.name for l in self.layers]}"
+            )
+        groups = list(self.groups)
+        declared = {g.name for g in groups}
+        if len(declared) != len(groups):
+            raise ValueError(
+                f"spec {self.name!r}: duplicate group names in "
+                f"{[g.name for g in groups]}"
+            )
+        # legacy convention: bare LayerSpec.group tags imply a
+        # column_concat group of the layers sharing the tag
+        implicit: dict = {}
+        for l in self.layers:
+            if l.group is not None and l.group not in declared:
+                implicit.setdefault(l.group, []).append(l.name)
+        for gname, members in implicit.items():
+            groups.append(GroupSpec(
+                name=gname, kind=GROUP_COLUMN_CONCAT,
+                members=tuple(members),
+            ))
+        object.__setattr__(self, "groups", tuple(groups))
+        if self.groups and self.kind != TREE:
+            raise ValueError(
+                f"spec {self.name!r}: fusion groups are a tree-spec "
+                "feature (stack layers fuse via epilogues and the "
+                "megakernel packing instead)"
+            )
+        locals_seen: dict = {}
+        for g in self.groups:
+            _validate_group(g, by_name, self.name)
+            parent = _parent_of(g.members[0])
+            key = (parent, g.local_name)
+            if key in locals_seen:
+                raise ValueError(
+                    f"spec {self.name!r}: groups {locals_seen[key]!r} "
+                    f"and {g.name!r} collide on local name "
+                    f"{g.local_name!r} under parent {parent!r}"
+                )
+            locals_seen[key] = g.name
 
     def layer(self, name: str) -> LayerSpec:
         for l in self.layers:
             if l.name == name:
                 return l
-        raise KeyError(name)
+        raise KeyError(
+            f"no layer {name!r} in spec {self.name!r}; declared layers: "
+            f"{', '.join(self.layer_names()) or '(none)'}"
+        )
 
     def layer_names(self) -> Tuple[str, ...]:
         """Every declared analog layer name, in order - the key space of
@@ -91,16 +285,23 @@ class ModuleSpec:
         model (stack: layer names; tree: dotted params paths)."""
         return tuple(l.name for l in self.layers)
 
-    def groups(self) -> dict:
-        """{group id -> ordered member names} for every fused dispatch
-        group the spec declares.  Group members share one physical input
-        encoding; calibration must fit their activation scales together
-        (``repro.calib.routines.share_group_input_scale``)."""
-        out: dict = {}
-        for l in self.layers:
-            if l.group is not None:
-                out.setdefault(l.group, []).append(l.name)
-        return out
+    def group(self, name: str) -> GroupSpec:
+        for g in self.groups:
+            if g.name == name:
+                return g
+        raise KeyError(
+            f"no fusion group {name!r} in spec {self.name!r}; declared "
+            f"groups: {', '.join(g.name for g in self.groups) or '(none)'}"
+        )
+
+    def group_members(self) -> dict:
+        """{group name -> member name tuple} for every fusion group.
+        Group members share one analog dispatch; calibration fits their
+        activation scales together
+        (``repro.calib.routines.share_group_input_scale``).  Returns
+        freshly-built immutable tuples (the pre-GroupSpec ``groups()``
+        method leaked mutable lists from the frozen spec)."""
+        return {g.name: tuple(g.members) for g in self.groups}
 
 
 def linear_spec(in_dim: int, out_dim: int, *, name: str = "layer",

@@ -171,6 +171,28 @@ class CompiledModel:
             self, lowered=lowered, calibration=snapshot
         )
 
+    def group_plan(self, name: str):
+        """The lowered :class:`repro.exec.plan.GroupPlan` of a declared
+        fusion group - the canonical replacement for reaching into the
+        lowered tree by the ``"_qkv_plan"`` magic key.  ``name`` is the
+        :class:`repro.api.module.GroupSpec` name (e.g.
+        ``"layers.l0.attn.qkv"``).  Returns None when the group did not
+        fuse under this config (column_concat under static activation
+        calibration without a group-calibrated shared input LSB, or
+        digital mode, which compiles no plans)."""
+        from repro.api.module import group_parent
+
+        g = self.spec.group(name)          # KeyError lists declared groups
+        if self.spec.kind != "tree" or self.lowered is None:
+            return None
+        parent, _ = group_parent(g)
+        node = self.lowered
+        for part in parent.split(".") if parent else ():
+            node = node[int(part)] if isinstance(
+                node, (list, tuple)
+            ) else node[part]
+        return node.get("_groups", {}).get(g.local_name)
+
     # ------------------------------------------------------------ sharding
     def sharding_specs(self):
         """Logical-axis spec pytree matching :meth:`lower`'s output -

@@ -182,7 +182,18 @@ def share_group_input_scale(
     member's ``a_scale_in`` to the widest member scale (no member's range
     is truncated), keeping each member's own ``a_scale`` for the dequant
     side.  ``scales`` overrides the per-member scales when the snapshot
-    does not carry them (e.g. scales fitted elsewhere)."""
+    does not carry them (e.g. scales fitted elsewhere).
+
+    Applies to both concat group kinds (``names`` comes from
+    ``spec.group(name).members``): a ``column_concat`` group NEEDS the
+    shared LSB to fuse at all under static activation calibration (one
+    physical encoding for one shared input); a ``batch_concat`` group
+    fuses either way (each member row-block encodes at its own scale) but
+    a shared ``a_scale_in`` gives the whole fused pass one event LSB,
+    matching a hardware deployment where the FPGA preprocessing is
+    configured once per array config.  ``expert_stack`` groups keep
+    dynamic activation scaling (the dispatch buffer has no per-member
+    device) and take no part here."""
     if scales is None:
         scales = []
         for name in names:

@@ -290,22 +290,51 @@ def analog_plan_specs(plan, layer_axes: Sequence[Sequence[Optional[str]]]):
     return dataclasses.replace(plan, layers=layers, mega=mega)
 
 
+def group_plan_specs(gp, parent_spec):
+    """Spec pytree for one lowered fusion group
+    (:class:`repro.exec.plan.GroupPlan`), derived from the members'
+    master-weight specs in ``parent_spec`` (the parent node's spec dict):
+
+    - ``column_concat``: the fused plan inherits member 0's weight spec
+      (concatenated output columns keep the head axis; shape-aware
+      resolution falls back to replication when the fused width does not
+      divide the mesh axis),
+    - ``batch_concat``: ditto, with the member axis (replicated) spliced
+      in before the (in, out) pair,
+    - ``expert_stack``: the member's raw stacked-weight spec (e.g.
+      ``("expert", "embed", None)``) already carries the expert axis -
+      expert parallelism shards baked plans exactly like raw experts.
+    """
+    import dataclasses
+
+    m0 = gp.member_names[0]
+    mspec = parent_spec[m0]
+    w_spec = tuple(mspec["w"]) if isinstance(mspec, dict) else tuple(mspec)
+    if gp.kind == "batch_concat":
+        w_spec = w_spec[:-2] + (None,) + w_spec[-2:]
+    return dataclasses.replace(gp, fused=layer_plan_specs(gp.fused, w_spec))
+
+
 def plan_specs_like(spec_tree, lowered_tree):
     """Augment a logical-axis spec tree with entries for the ``"_plan"`` /
-    ``"_qkv_plan"`` leaves of a pre-lowered params tree, so the result
-    matches the lowered tree's structure leaf for leaf.
+    ``"_groups"`` / ``"_qkv_plan"`` leaves of a pre-lowered params tree,
+    so the result matches the lowered tree's structure leaf for leaf.
 
     Plan axes are derived from the sibling master-weight specs: a layer's
-    ``"_plan"`` inherits its own ``"w"`` spec; a fused ``"_qkv_plan"``
-    inherits the ``wq`` weight's spec (the concatenated output columns
-    keep the head axis; shape-aware resolution falls back to replication
-    when the fused width does not divide the mesh axis).
+    ``"_plan"`` inherits its own ``"w"`` spec; fusion-group plans derive
+    from their members' specs (:func:`group_plan_specs`); the legacy
+    ``"_qkv_plan"`` alias inherits the ``wq`` weight's spec as before.
     """
     if isinstance(lowered_tree, dict):
         out = {}
         for k, v in lowered_tree.items():
             if k == "_plan":
                 out[k] = layer_plan_specs(v, spec_tree["w"])
+            elif k == "_groups":
+                out[k] = {
+                    name: group_plan_specs(gp, spec_tree)
+                    for name, gp in v.items()
+                }
             elif k == "_qkv_plan":
                 out[k] = layer_plan_specs(v, spec_tree["wq"]["w"])
             else:

@@ -47,10 +47,32 @@ from repro.exec.plan import (
     INPUT_CODES,
     INPUT_FLOAT,
     AnalogPlan,
+    GroupPlan,  # noqa: F401  (re-exported beside its lowerings)
     LayerPlan,
     MegakernelPack,
     default_shift,
 )
+
+# Trace-time lowering accounting (mirrors run.ANALOG_DISPATCHES): every
+# weight-quantize-and-bake bumps the counter when it is TRACED, so a test
+# can assert that a pre-lowered model performs ZERO lowering work per call
+# under a cached jit (the per-call paths re-derive codes/gains inside the
+# traced program; the compile-once paths bake them outside it).
+LOWERINGS = 0
+
+
+def reset_lowering_count() -> None:
+    global LOWERINGS
+    LOWERINGS = 0
+
+
+def lowering_count() -> int:
+    return LOWERINGS
+
+
+def _count_lowering(n: int = 1) -> None:
+    global LOWERINGS
+    LOWERINGS += n
 
 
 def lower_layer(
@@ -72,6 +94,7 @@ def lower_layer(
     (a measured :class:`repro.calib.snapshot.LayerCalibration`) replaces
     the oracle ``params["fpn"]`` bake with measurement-driven tables.
     """
+    _count_lowering()
     if epilogue not in (EPILOGUE_NONE, EPILOGUE_RELU_SHIFT):
         raise ValueError(f"unknown epilogue {epilogue!r}")
     if epilogue == EPILOGUE_RELU_SHIFT and params.get("b") is not None:
@@ -343,6 +366,161 @@ def lower_fused(
         shift=0,
         a_scale_in=a_scale_in,
     )
+
+
+def _stack_layer_plans(plans: Sequence[LayerPlan]) -> LayerPlan:
+    """Stack N same-geometry LayerPlans along a new member axis: every
+    array leaf gains the member axis AFTER any scan-stack prefix (so a
+    stacked plan still slices member-first under ``jax.lax.scan`` over
+    the prefix).  Optional leaves (offsets/colsum/bias) are zero-filled
+    for members that lack them; ``a_scale_in`` stacks only when every
+    member carries it (a partial group calibration must not unlock a
+    shared encoding)."""
+    p0 = plans[0]
+    nd = p0.w_eff.ndim - 2           # scan-stack prefix rank
+    for lp in plans:
+        if (lp.k, lp.n, lp.chunk_rows, lp.signed_input,
+                lp.w_eff.ndim) != (p0.k, p0.n, p0.chunk_rows,
+                                   p0.signed_input, p0.w_eff.ndim):
+            raise ValueError(
+                "batch-concat members must share the weight geometry and "
+                "input encoding: "
+                f"{[(p.k, p.n, p.chunk_rows, p.signed_input) for p in plans]}"
+            )
+
+    def stk(leaves, fill=None):
+        if all(x is None for x in leaves):
+            return None
+        if fill is not None and any(x is None for x in leaves):
+            leaves = [fill() if x is None else x for x in leaves]
+        elif any(x is None for x in leaves):
+            return None
+        return jnp.stack([jnp.asarray(x, jnp.float32) for x in leaves],
+                         axis=nd)
+
+    c = p0.n_chunks
+    pre = p0.w_eff.shape[:-2]
+    return LayerPlan(
+        w_eff=stk([lp.w_eff for lp in plans]),
+        w_scale=stk([jnp.broadcast_to(lp.w_scale, pre + (1, lp.n))
+                     for lp in plans]),
+        a_scale=stk([jnp.broadcast_to(lp.a_scale, pre) for lp in plans]),
+        # per-column broadcast regardless of the members' (scalar) gains:
+        # equal values, identical arithmetic, no ndim branching
+        gain=stk([
+            jnp.broadcast_to(
+                jnp.asarray(g, jnp.float32)[..., None]
+                if jnp.ndim(g) <= len(pre) else jnp.asarray(g, jnp.float32),
+                pre + (p0.n,),
+            )
+            for g in (lp.gain for lp in plans)
+        ]),
+        chunk_offset=stk(
+            [lp.chunk_offset for lp in plans],
+            fill=lambda: jnp.zeros(pre + (c, p0.n), jnp.float32),
+        ),
+        colsum=stk(
+            [lp.colsum for lp in plans],
+            fill=lambda: jnp.zeros(pre + (p0.n,), jnp.float32),
+        ),
+        bias=stk(
+            [lp.bias for lp in plans],
+            fill=lambda: jnp.zeros(pre + (p0.n,), jnp.float32),
+        ),
+        a_scale_in=stk([
+            None if lp.a_scale_in is None
+            else jnp.broadcast_to(lp.a_scale_in, pre) for lp in plans
+        ]),
+        k=p0.k,
+        n=p0.n,
+        chunk_rows=p0.chunk_rows,
+        signed_input=p0.signed_input,
+        epilogue=EPILOGUE_NONE,
+        shift=0,
+    )
+
+
+def lower_batch_concat(
+    layer_params: Sequence[Params],
+    cfg: AnalogConfig,
+    *,
+    signed_input: Optional[str] = None,
+    calibs: Optional[Sequence] = None,
+) -> LayerPlan:
+    """Lower N same-geometry, DIFFERENT-input layers into ONE dispatch
+    group (the RWKV r/k/v/g fusion): on hardware the member matrices sit
+    on disjoint column blocks of one array configuration and every
+    member's input batch streams through in the same pass - the array is
+    loaded once and the concatenated batch fills the dispatch (paper
+    §II-D; Weis et al. 2020 on batched array reuse).
+
+    The lowered form stacks every member's baked tables along a leading
+    member axis (``[G, K_pad, N]`` weights, ``[G]`` scales/gains, ...);
+    :func:`repro.exec.run.run_batch_concat` replays it as one vmapped
+    member-axis dispatch.  Because ADC columns are independent, the
+    member-diagonal results the emulator computes are bit-exact vs the G
+    solo dispatches - under BOTH calibration modes: each member's rows
+    encode at that member's own activation scale (dynamic: per-member
+    abs-max; static: the member's baked ``a_scale``, or the group's
+    shared ``a_scale_in`` when it was calibrated together via
+    :func:`repro.calib.routines.share_group_input_scale`).
+
+    Scan-stacked members ([S, K, N] weights) lower under vmap like
+    single layers do; the member axis lands after the stack prefix.
+    ``calibs[i]`` applies to plain 2-D members only (a stacked layer has
+    no single physical device).
+    """
+    cs = list(calibs) if calibs is not None else [None] * len(layer_params)
+    plans = []
+    for p, c in zip(layer_params, cs):
+        if p["w"].ndim == 3:
+            plans.append(jax.vmap(
+                lambda q: lower_layer(q, cfg, signed_input=signed_input)
+            )(p))
+        else:
+            plans.append(
+                lower_layer(p, cfg, signed_input=signed_input, calib=c)
+            )
+    return _stack_layer_plans(plans)
+
+
+def lower_expert_stack(w, cfg: AnalogConfig) -> LayerPlan:
+    """Lower a raw stacked expert weight array ``[E, K, N]`` (an MoE
+    ``up``/``gate``/``down`` matrix) ONCE into a per-expert plan: weight
+    quantization, per-expert column scales, the statistical analog gain
+    and chunk padding are all baked here, where the per-call path
+    (:func:`repro.models.moe._analog_expert_matmul`) re-derives them
+    inside every traced forward.
+
+    The derivation matches the per-call path exactly - same scale
+    formulas, same quantizer, same per-expert gain - so the replay
+    (:func:`repro.exec.run.run_expert_stack`) is bit-exact vs per-call.
+    Expert fixed-pattern noise is omitted, as per-call (DESIGN.md:
+    the rank-1 map would add O(E*(K+N)) state); activation scaling stays
+    dynamic at run time.
+    """
+    from repro.core.analog import _statistical_gain
+
+    w = jnp.asarray(w, jnp.float32)
+    if w.ndim != 3:
+        raise ValueError(
+            f"expert stacks are [E, K, N] weight arrays, got shape "
+            f"{w.shape}"
+        )
+    e = w.shape[0]
+    params = {
+        "w": w,
+        "w_scale": quant.weight_scale_from_max(
+            jnp.abs(w).max(axis=1, keepdims=True) + 1e-9
+        ),
+        "a_scale": jnp.ones((e,), jnp.float32),   # dynamic at run time
+        "gain": jax.vmap(
+            lambda we: _statistical_gain(we, cfg.chunk_rows)
+        )(w),
+    }
+    return jax.vmap(
+        lambda p: lower_layer(p, cfg, signed_input="none")
+    )(params)
 
 
 def megakernel_ineligible_reason(plan: AnalogPlan) -> Optional[str]:

@@ -41,6 +41,26 @@ from repro.core.hw import BSS2
 EPILOGUE_NONE = "none"
 EPILOGUE_RELU_SHIFT = "relu_shift"
 
+# Fusion-group kinds (static).  A fusion group is N declared layers that
+# replay as ONE analog dispatch (paper §II-D: fill the 256x512 array per
+# dispatch, columns run in parallel):
+#   "column_concat": same input, concatenated output columns (attention
+#                    QKV) - one [K, sum(N_i)] pass.
+#   "batch_concat":  same weight geometry, DIFFERENT inputs (RWKV
+#                    r/k/v/g) - the member matrices sit on disjoint
+#                    column blocks of one array config and every member's
+#                    input batch streams through in the same pass; the
+#                    emulator computes it as one vmapped member-axis
+#                    dispatch (the discarded off-diagonal columns cannot
+#                    affect the kept ones - ADC column independence).
+#   "expert_stack":  a stacked [E, K, N] expert weight array (MoE) lowered
+#                    ONCE into a per-expert plan replayed by the einsum
+#                    dispatch path.
+GROUP_COLUMN_CONCAT = "column_concat"
+GROUP_BATCH_CONCAT = "batch_concat"
+GROUP_EXPERT_STACK = "expert_stack"
+GROUP_KINDS = (GROUP_COLUMN_CONCAT, GROUP_BATCH_CONCAT, GROUP_EXPERT_STACK)
+
 # Input-domain tags (static).  Baked into AnalogPlan at lower time so the
 # executor never has to GUESS whether the initial activations are already
 # unsigned 5-bit event codes: "codes" skips activation quantization,
@@ -129,6 +149,65 @@ jax.tree_util.register_dataclass(
         "flatten_out",
     ],
 )
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPlan:
+    """One lowered fusion group (frozen pytree): the fused dispatch plus
+    the static member layout needed to hand each member its own result.
+
+    Array fields (pytree leaves):
+      fused: a :class:`LayerPlan` whose layout depends on ``kind``:
+        - ``column_concat``: concatenated output columns
+          (``[K_pad, sum(N_i)]`` - :func:`repro.exec.lower.lower_fused`),
+        - ``batch_concat``: a member axis on EVERY leaf
+          (``[G, K_pad, N]`` - :func:`repro.exec.lower.lower_batch_concat`;
+          per-member ``a_scale``/``a_scale_in`` ride along stacked, so
+          each member keeps its own input encoding),
+        - ``expert_stack``: an expert axis on every leaf
+          (``[E, K_pad, N]`` - :func:`repro.exec.lower.lower_expert_stack`).
+
+    Static fields (hashable aux data):
+      kind:         one of :data:`GROUP_KINDS`.
+      member_names: the members' LOCAL names in the parent params node,
+                    declaration order (e.g. ``("wq", "wk", "wv")``).
+      member_ns:    each member's output width (column-split offsets for
+                    ``column_concat``; informational otherwise).
+    """
+
+    kind: str
+    fused: LayerPlan
+    member_names: Tuple[str, ...]
+    member_ns: Tuple[int, ...]
+
+    @property
+    def expected_dispatches(self) -> int:
+        """A fusion group replays as ONE analog dispatch by construction
+        (split-pair members still dispatch twice without
+        ``cfg.fused_split``; see :class:`AnalogPlan.expected_dispatches`
+        for the counting contract)."""
+        return 1
+
+
+jax.tree_util.register_dataclass(
+    GroupPlan,
+    data_fields=["fused"],
+    meta_fields=["kind", "member_names", "member_ns"],
+)
+
+
+def find_group(groups, kind: str, member_names: Tuple[str, ...]
+               ) -> Optional[GroupPlan]:
+    """Resolve a lowered :class:`GroupPlan` from a node's ``"_groups"``
+    dict by (kind, exact member names) - how model host programs locate
+    THEIR fusion group.  Matching on structure rather than the group's
+    (user-chosen) name keeps consumers honest: a declared group of the
+    wrong kind is never fed to the wrong replay path, and any group name
+    works."""
+    for gp in (groups or {}).values():
+        if gp.kind == kind and gp.member_names == tuple(member_names):
+            return gp
+    return None
 
 
 @dataclasses.dataclass(frozen=True)

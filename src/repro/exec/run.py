@@ -41,7 +41,11 @@ from repro.core.hw import BSS2
 from repro.exec.plan import (
     EPILOGUE_NONE,
     EPILOGUE_RELU_SHIFT,
+    GROUP_BATCH_CONCAT,
+    GROUP_COLUMN_CONCAT,
+    GROUP_EXPERT_STACK,
     AnalogPlan,
+    GroupPlan,
     LayerPlan,
 )
 
@@ -173,6 +177,134 @@ def run_layer(
     if lp.bias is not None:
         y = y + lp.bias
     return y.astype(in_dtype)
+
+
+def run_batch_concat(
+    gp: GroupPlan,
+    xs,
+    cfg: AnalogConfig,
+    *,
+    key: Optional[jax.Array] = None,
+):
+    """Replay a ``batch_concat`` fusion group: G same-geometry layers
+    with DIFFERENT inputs execute as ONE analog dispatch (the RWKV
+    r/k/v/g fusion, 4 -> 1).
+
+    ``xs`` is the ordered sequence of member inputs (same shape each,
+    ``gp.member_names`` order); returns the tuple of member outputs.
+
+    On hardware the member matrices occupy disjoint column blocks of one
+    array configuration and the stacked input batches stream through in
+    a single pass; the emulator computes exactly the member-diagonal
+    results of that pass as a vmapped member-axis dispatch (the
+    discarded off-diagonal columns cannot affect the kept ones - ADC
+    column independence).  Each member's rows encode at that member's
+    own activation scale - the per-vector FPGA preprocessing - so the
+    replay is bit-exact vs the G solo dispatches under dynamic AND
+    static calibration (vmapping :func:`run_layer` over the member axis
+    reproduces the solo arithmetic verbatim, per-member abs-max
+    included).
+    """
+    g = len(gp.member_names)
+    if len(xs) != g:
+        raise ValueError(
+            f"group has {g} members ({gp.member_names}), got {len(xs)} "
+            "inputs"
+        )
+    lp = gp.fused
+    if getattr(lp.w_eff, "ndim", 3) != 3:
+        raise ValueError(
+            "run_batch_concat expects member-leading [G, K_pad, N] plan "
+            "leaves (scan-stacked group plans must be sliced by the scan "
+            f"first), got w_eff ndim {lp.w_eff.ndim}"
+        )
+    x = jnp.stack([jnp.asarray(xi) for xi in xs], axis=0)
+    # ONE dispatch for the whole group: the vmapped member axis is a
+    # single traced analog pass (run_layer's own counter bumps once)
+    if key is None:
+        y = jax.vmap(lambda l, xi: run_layer(l, xi, cfg))(lp, x)
+    else:
+        ks = jax.random.split(key, g)
+        y = jax.vmap(
+            lambda l, xi, ki: run_layer(l, xi, cfg, key=ki)
+        )(lp, x, ks)
+    return tuple(y[i] for i in range(g))
+
+
+def run_expert_stack(
+    gp: GroupPlan,
+    xe: jax.Array,
+    cfg: AnalogConfig,
+    *,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Replay an ``expert_stack`` fusion group: ``xe`` [E, C, K] through
+    the pre-lowered per-expert plan -> [E, C, N].
+
+    Value-identical to the per-call MoE path
+    (:func:`repro.models.moe._analog_expert_matmul`) with the lowering
+    hoisted out of the traced forward: one shared dynamic activation
+    scale over the whole dispatch buffer, signed inputs via the pos/neg
+    split, per-expert column scales and gains baked at compile time.
+    ``key`` is accepted for signature uniformity; expert readout noise is
+    omitted exactly as on the per-call path (documented in
+    :mod:`repro.models.moe`).
+    """
+    del key
+    from repro.core.analog import analog_matmul as _matmul
+
+    lp = gp.fused
+    in_dtype = xe.dtype
+    xf = xe.astype(jnp.float32)
+    a_scale = quant.act_scale_from_max(
+        jax.lax.stop_gradient(jnp.abs(xf)).max() + 1e-9
+    )
+    inner = cfg.replace(use_pallas=False, signed_input="none")
+    k_pad = lp.w_eff.shape[-2]
+    a_pos = _pad_codes(quant.quantize_act(xf, a_scale), k_pad)
+    a_neg = _pad_codes(quant.quantize_act(-xf, a_scale), k_pad)
+
+    def one(a, w, g):
+        return _matmul(a, w, g, None, None, inner)
+
+    _count()
+    gain = lp.gain if lp.gain.ndim == 1 else lp.gain[..., 0]   # [E]
+    y_int = jax.vmap(one)(a_pos, lp.w_eff, gain) - jax.vmap(one)(
+        a_neg, lp.w_eff, gain
+    )
+    y = y_int * (a_scale * lp.w_scale / gain[:, None, None])
+    return y.astype(in_dtype)
+
+
+def run_group(
+    gp: GroupPlan,
+    x,
+    cfg: AnalogConfig,
+    *,
+    key: Optional[jax.Array] = None,
+):
+    """Replay any lowered fusion group.
+
+    - ``column_concat``: ``x`` is the members' SHARED input; returns the
+      tuple of member outputs (one fused dispatch, columns split back).
+    - ``batch_concat``: ``x`` is the sequence of member inputs; returns
+      the tuple of member outputs.
+    - ``expert_stack``: ``x`` is the ``[E, C, K]`` dispatch buffer;
+      returns the ``[E, C, N]`` expert outputs.
+    """
+    if gp.kind == GROUP_COLUMN_CONCAT:
+        y = run_layer(gp.fused, x, cfg, key=key)
+        offs = []
+        acc = 0
+        for n in gp.member_ns[:-1]:
+            acc += n
+            offs.append(acc)
+        return tuple(jnp.split(y, offs, axis=-1))
+    if gp.kind == GROUP_BATCH_CONCAT:
+        return run_batch_concat(gp, x, cfg, key=key)
+    if gp.kind == GROUP_EXPERT_STACK:
+        return run_expert_stack(gp, x, cfg, key=key)
+    raise ValueError(f"unknown group kind {gp.kind!r}")
 
 
 def _run_layer_fused_infer(

@@ -90,7 +90,19 @@ def attention_apply(params, x, *, positions, acfg: AnalogConfig, n_heads,
     b, s, _ = x.shape
     g = n_heads // n_kv_heads
     ks = jax.random.split(key, 4) if key is not None else (None,) * 4
-    qkv_lp = params.get("_qkv_plan") if acfg.mode != "digital" else None
+    qkv_lp = None
+    if acfg.mode != "digital":
+        # the compiled QKV dispatch group (repro.api GroupSpec
+        # "column_concat"): canonical storage is the parent node's
+        # "_groups" entry, resolved by kind + exact members (any group
+        # name works; a group of another kind is never mistaken for the
+        # shared-input fusion); "_qkv_plan" is the legacy alias (same
+        # fused LayerPlan object) kept for trees lowered by older code
+        from repro.exec.plan import find_group
+
+        gp = find_group(params.get("_groups"), "column_concat",
+                        ("wq", "wk", "wv"))
+        qkv_lp = gp.fused if gp is not None else params.get("_qkv_plan")
     if qkv_lp is not None and (
         qkv_lp.signed_input != acfg.signed_input
         or qkv_lp.chunk_rows != acfg.chunk_rows

@@ -66,14 +66,62 @@ def moe_specs(*, act="swiglu", n_shared=0,
     return p
 
 
+def moe_module_spec(d_model, d_ff, n_experts, *, top_k, act="swiglu",
+                    n_shared=0, capacity_factor: float = 1.25,
+                    dense: bool = False,
+                    noise: NoiseConfig = NoiseConfig()):
+    """Declare one MoE layer for the api front door:
+    ``api.compile(moe_module_spec(...), params, run)`` lowers every
+    expert weight stack ONCE at compile time (``expert_stack`` fusion
+    groups -> per-expert plans: weight codes, column scales and analog
+    gains baked, zero lowering work per call) and
+    ``CompiledModel.apply(x, key=)`` is :func:`moe_apply` over the
+    pre-lowered tree.  ``params`` is :func:`moe_init`'s dict.  The
+    router (and the shard_map expert-parallel dispatch, which slices raw
+    weights per shard) keep their existing paths."""
+    from repro import api
+
+    def _apply(model, x, *, key=None, **kw):
+        return moe_apply(model.lower(), x, acfg=model.acfg, top_k=top_k,
+                         capacity_factor=capacity_factor, act=act,
+                         dense=dense, key=key, **kw)
+
+    names = ["up", "down"] + (["gate"] if act == "swiglu" else [])
+    layers = [
+        api.LayerSpec(n, d_ff if n == "down" else d_model,
+                      d_model if n == "down" else d_ff,
+                      stacked=n_experts)
+        for n in names
+    ]
+    groups = tuple(
+        api.GroupSpec(n, "expert_stack", (n,)) for n in names
+    )
+    return api.ModuleSpec(
+        name=f"moe_{d_model}x{d_ff}x{n_experts}",
+        kind="tree",
+        apply_fn=_apply,
+        layers=tuple(layers),
+        groups=groups,
+        param_axes=moe_specs(act=act, n_shared=n_shared, noise=noise),
+    )
+
+
 def _analog_expert_matmul(xe, w, acfg: AnalogConfig):
     """Per-expert analog matmul: xe [E, C, K] x w [E, K, N] with the BSS-2
     chunked saturating semantics (per-expert column scales + gain, signed
     inputs via split encoding).  Expert fixed-pattern noise is omitted (the
-    rank-1 map would add O(E*(K+N)) state; documented in DESIGN.md)."""
+    rank-1 map would add O(E*(K+N)) state; documented in DESIGN.md).
+
+    This is the PER-CALL path: weight codes, column scales and gains are
+    re-derived inside every traced forward.  Compiling through
+    :func:`moe_module_spec` replaces it with a pre-lowered
+    ``expert_stack`` plan (:func:`repro.exec.lower.lower_expert_stack`,
+    bit-exact, zero lowering work per call)."""
     from repro.core import quant
     from repro.core.analog import _statistical_gain, analog_matmul
+    from repro.exec.lower import _count_lowering
 
+    _count_lowering()
     xf = xe.astype(jnp.float32)
     wf = w.astype(jnp.float32)
     a_scale = quant.act_scale_from_max(
@@ -98,12 +146,23 @@ def _analog_expert_matmul(xe, w, acfg: AnalogConfig):
     return y.astype(xe.dtype)
 
 
-def _expert_matmul(xe, w, acfg: AnalogConfig):
-    """xe: [..., E, C, K] x w [E, K, N] -> [..., E, C, N]."""
+def _expert_matmul(xe, w, acfg: AnalogConfig, plan=None):
+    """xe: [..., E, C, K] x w [E, K, N] -> [..., E, C, N].  ``plan`` (a
+    pre-lowered ``expert_stack`` :class:`repro.exec.plan.GroupPlan`)
+    replays the compile-time bake instead of re-deriving codes/gains per
+    call - bit-exact vs the per-call path by construction."""
     if acfg.mode == "digital":
         return jnp.einsum("...eck,ekn->...ecn", xe, w.astype(xe.dtype))
+
+    def one(x3):
+        if plan is not None:
+            from repro.exec.run import run_expert_stack
+
+            return run_expert_stack(plan, x3, acfg)
+        return _analog_expert_matmul(x3, w, acfg)
+
     if xe.ndim == 3:
-        return _analog_expert_matmul(xe, w, acfg)
+        return one(xe)
     # fold leading group dims into capacity for the per-expert analog op
     lead = xe.shape[:-3]
     g = 1
@@ -111,7 +170,7 @@ def _expert_matmul(xe, w, acfg: AnalogConfig):
         g *= v
     e, c, k = xe.shape[-3:]
     x3 = xe.reshape(g, e, c, k).transpose(1, 0, 2, 3).reshape(e, g * c, k)
-    y3 = _analog_expert_matmul(x3, w, acfg)
+    y3 = one(x3)
     n = y3.shape[-1]
     return (
         y3.reshape(e, g, c, n).transpose(1, 0, 2, 3).reshape(*lead, e, c, n)
@@ -119,14 +178,23 @@ def _expert_matmul(xe, w, acfg: AnalogConfig):
 
 
 def _expert_ffn(params, xe, act, acfg: AnalogConfig):
-    """xe: [E, C, d] -> [E, C, d] through the (analog) expert FFNs."""
-    up = _expert_matmul(xe, params["up"], acfg)
+    """xe: [E, C, d] -> [E, C, d] through the (analog) expert FFNs.
+    A params tree compiled through ``api.compile(moe_module_spec(...))``
+    carries pre-lowered ``expert_stack`` plans in ``params["_groups"]``
+    (keyed by the member weight's name); raw params keep the per-call
+    derivation."""
+    from repro.exec.plan import find_group
+
+    gps = params.get("_groups")
+    plan_of = lambda n: find_group(gps, "expert_stack", (n,))
+    up = _expert_matmul(xe, params["up"], acfg, plan=plan_of("up"))
     if act == "swiglu":
-        gate = _expert_matmul(xe, params["gate"], acfg)
+        gate = _expert_matmul(xe, params["gate"], acfg,
+                              plan=plan_of("gate"))
         h = jax.nn.silu(gate) * up
     else:
         h = jax.nn.gelu(up)
-    return _expert_matmul(h, params["down"], acfg)
+    return _expert_matmul(h, params["down"], acfg, plan=plan_of("down"))
 
 
 def _expert_block_shard_map(params, buf_inputs, e, capacity, d, act, acfg):

@@ -66,6 +66,36 @@ def rwkv_specs(noise: NoiseConfig = NoiseConfig()):
     }
 
 
+def rwkv_module_spec(d_model, n_heads, *,
+                     noise: NoiseConfig = NoiseConfig()):
+    """Declare one RWKV-6 time-mix block for the api front door:
+    ``api.compile(rwkv_module_spec(d, h), params, run)`` bakes the five
+    projections once - r/k/v/g fused into ONE ``batch_concat`` dispatch
+    group (the four token-shift mixes stream through one array config,
+    4 -> 1 analog dispatches; paper §II-D array filling) - and
+    ``CompiledModel.apply(x, cache=, key=)`` is :func:`rwkv_apply` over
+    the pre-lowered tree.  ``params`` is :func:`rwkv_init`'s dict."""
+    from repro import api
+
+    def _apply(model, x, *, cache=None, key=None):
+        return rwkv_apply(model.lower(), x, acfg=model.acfg,
+                          n_heads=n_heads, cache=cache, key=key)
+
+    names = ("wr", "wk", "wv", "wg")
+    return api.ModuleSpec(
+        name=f"rwkv_tmix_{d_model}x{n_heads}",
+        kind="tree",
+        apply_fn=_apply,
+        layers=tuple(
+            [api.LayerSpec(n, d_model, d_model, group="rkvg")
+             for n in names]
+            + [api.LayerSpec("wo", d_model, d_model)]
+        ),
+        groups=(api.GroupSpec("rkvg", "batch_concat", names),),
+        param_axes=rwkv_specs(noise),
+    )
+
+
 def _token_shift(x, x_prev):
     """shift sequence right by one; x_prev is the carry for step 0."""
     return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
@@ -112,10 +142,36 @@ def rwkv_apply(params, x, *, acfg: AnalogConfig, n_heads, cache=None,
     xw = _lerp(x, xs, tm["mu_w"])
 
     kk = jax.random.split(key, 5) if key is not None else (None,) * 5
-    r = L.linear_apply(params["wr"], xr, acfg, key=kk[0])
-    k = L.linear_apply(params["wk"], xk, acfg, key=kk[1])
-    v = L.linear_apply(params["wv"], xv, acfg, key=kk[2])
-    g = L.linear_apply(params["wg"], xg, acfg, key=kk[3])
+    gp = None
+    if acfg.mode != "digital":
+        # resolved by kind + exact members, not by group name: only a
+        # batch_concat plan over these four projections takes this path
+        from repro.exec.plan import find_group
+
+        gp = find_group(params.get("_groups"), "batch_concat",
+                        ("wr", "wk", "wv", "wg"))
+    if gp is not None and (
+        gp.fused.signed_input != acfg.signed_input
+        or gp.fused.chunk_rows != acfg.chunk_rows
+    ):
+        gp = None        # baked attrs disagree with this call site
+    if gp is not None:
+        # compiled r/k/v/g dispatch group (repro.api GroupSpec
+        # "batch_concat"): the four same-geometry projections replay as
+        # ONE analog dispatch - member matrices on disjoint column blocks
+        # of one array config, all four token-shift mixes streamed
+        # through in the same pass; each member keeps its own input
+        # encoding, so the result is bit-exact vs the four solo
+        # dispatches (under dynamic AND static activation calibration)
+        from repro.exec.run import run_batch_concat
+
+        r, k, v, g = run_batch_concat(gp, (xr, xk, xv, xg), acfg,
+                                      key=kk[0])
+    else:
+        r = L.linear_apply(params["wr"], xr, acfg, key=kk[0])
+        k = L.linear_apply(params["wk"], xk, acfg, key=kk[1])
+        v = L.linear_apply(params["wv"], xv, acfg, key=kk[2])
+        g = L.linear_apply(params["wg"], xg, acfg, key=kk[3])
 
     dd = jnp.tanh(xw.astype(jnp.float32) @ params["w_lora_a"]) @ params[
         "w_lora_b"

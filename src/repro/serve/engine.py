@@ -53,9 +53,12 @@ class ServeEngine:
         # `drift_monitor` (repro.calib.DriftMonitor) is probed between
         # batches and, when ADC offsets drifted past its threshold,
         # hands back a refreshed snapshot that is HOT-SWAPPED into the
-        # baked plans: only chunk_offset leaves change, treedef and
-        # static metadata stay identical, so the jitted prefill/decode
-        # executables are reused as-is (no recompilation).
+        # baked plans - per-layer plans AND fusion-group plans of every
+        # kind (column_concat offsets concatenate, batch_concat offsets
+        # stack per member; expert_stack groups have no measured device
+        # and keep their bake): only chunk_offset leaves change, treedef
+        # and static metadata stay identical, so the jitted
+        # prefill/decode executables are reused as-is (no recompilation).
         self.model = None
         self.drift_monitor = drift_monitor
         step_kw = {}

@@ -9,10 +9,10 @@ from repro.core import (
     NOISELESS,
     AnalogConfig,
     NoiseConfig,
-    analog_linear_apply,
     analog_linear_init,
     analog_matmul,
 )
+from repro.api import apply_linear
 from repro.core.hw import BSS2
 
 KEY = jax.random.PRNGKey(42)
@@ -65,8 +65,8 @@ class TestAnalogLinear:
         from repro.core.analog import calibrate
 
         p = calibrate(p, x)
-        y_a = analog_linear_apply(p, x, NOISELESS_CFG)
-        y_d = analog_linear_apply(p, x, DIGITAL)
+        y_a = apply_linear(p, x, NOISELESS_CFG)
+        y_d = apply_linear(p, x, DIGITAL)
         rel = jnp.abs(y_a - y_d).max() / jnp.abs(y_d).max()
         assert float(rel) < 0.1, float(rel)
 
@@ -74,8 +74,8 @@ class TestAnalogLinear:
         """split encoding: f(-x) == -f(x) for bias-free layers."""
         p = _mk()
         x = jax.random.normal(KEY, (8, 256)) * 0.2
-        y1 = analog_linear_apply(p, x, NOISELESS_CFG)
-        y2 = analog_linear_apply(p, -x, NOISELESS_CFG)
+        y1 = apply_linear(p, x, NOISELESS_CFG)
+        y2 = apply_linear(p, -x, NOISELESS_CFG)
         np.testing.assert_allclose(np.asarray(y1), -np.asarray(y2), atol=1e-6)
 
     def test_offset_encoding_close_to_split(self):
@@ -84,11 +84,11 @@ class TestAnalogLinear:
         from repro.core.analog import calibrate
 
         p = calibrate(p, jnp.abs(x))
-        y_split = analog_linear_apply(p, x, NOISELESS_CFG)
-        y_off = analog_linear_apply(
+        y_split = apply_linear(p, x, NOISELESS_CFG)
+        y_off = apply_linear(
             p, x, NOISELESS_CFG.replace(signed_input="offset")
         )
-        y_d = analog_linear_apply(p, x, DIGITAL)
+        y_d = apply_linear(p, x, DIGITAL)
         scale = float(jnp.abs(y_d).max())
         assert float(jnp.abs(y_off - y_split).max()) / scale < 0.25
 
@@ -98,8 +98,8 @@ class TestAnalogLinear:
         from repro.core.analog import calibrate
 
         p = calibrate(p, x)
-        y_n = analog_linear_apply(p, x, NOISELESS_CFG.replace(signed_input="none"))
-        y_s = analog_linear_apply(p, x, NOISELESS_CFG)
+        y_n = apply_linear(p, x, NOISELESS_CFG.replace(signed_input="none"))
+        y_s = apply_linear(p, x, NOISELESS_CFG)
         np.testing.assert_allclose(np.asarray(y_n), np.asarray(y_s), atol=1e-6)
 
     def test_hil_gradients_finite_and_nonzero(self):
@@ -107,7 +107,7 @@ class TestAnalogLinear:
         x = jax.random.normal(KEY, (16, 256)) * 0.3
 
         def loss(params):
-            y = analog_linear_apply(params, x, AnalogConfig())
+            y = apply_linear(params, x, AnalogConfig())
             return (y**2).mean()
 
         g = jax.grad(loss)(p)
@@ -119,8 +119,8 @@ class TestAnalogLinear:
         p = _mk()
         x = jnp.abs(jax.random.normal(KEY, (8, 256))) * 0.2
         cfg = NOISELESS_CFG.replace(signed_input="none")
-        y_ref = analog_linear_apply(p, x, cfg)
-        y_pl = analog_linear_apply(p, x, cfg.replace(use_pallas=True))
+        y_ref = apply_linear(p, x, cfg)
+        y_pl = apply_linear(p, x, cfg.replace(use_pallas=True))
         np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pl), atol=1e-6)
 
     def test_noise_reproducible_by_seed(self):
@@ -134,14 +134,14 @@ class TestAnalogLinear:
         p = _mk(noise=NoiseConfig(readout_std=2.0))
         x = jax.random.normal(KEY, (4, 256)) * 0.3
         cfg = AnalogConfig(deterministic=False)
-        y1 = analog_linear_apply(p, x, cfg, key=jax.random.PRNGKey(1))
-        y2 = analog_linear_apply(p, x, cfg, key=jax.random.PRNGKey(2))
+        y1 = apply_linear(p, x, cfg, key=jax.random.PRNGKey(1))
+        y2 = apply_linear(p, x, cfg, key=jax.random.PRNGKey(2))
         assert float(jnp.abs(y1 - y2).max()) > 0.0
         # deterministic mode ignores the key
-        y3 = analog_linear_apply(
+        y3 = apply_linear(
             p, x, cfg.replace(deterministic=True), key=jax.random.PRNGKey(1)
         )
-        y4 = analog_linear_apply(
+        y4 = apply_linear(
             p, x, cfg.replace(deterministic=True), key=jax.random.PRNGKey(2)
         )
         np.testing.assert_array_equal(np.asarray(y3), np.asarray(y4))
@@ -161,7 +161,7 @@ class TestTraining:
         cfg = AnalogConfig()
 
         def loss(params):
-            return ((analog_linear_apply(params, x, cfg) - y_true) ** 2).mean()
+            return ((apply_linear(params, x, cfg) - y_true) ** 2).mean()
 
         l0 = float(loss(p))
         lr = 0.05

@@ -7,9 +7,9 @@ import numpy as np
 import pytest
 
 import repro.exec as E
+from repro.api import apply_linear
 from repro.core.analog import (
     AnalogConfig,
-    analog_linear_apply,
     analog_linear_init,
 )
 from repro.core.noise import NOISELESS, NoiseConfig
@@ -87,8 +87,8 @@ class TestFusedSplitKernel:
     def test_module_level_fused_matches_two_pass(self):
         p = _mk()
         x = jax.random.normal(KEY, (8, 256)) * 0.2
-        y_fused = analog_linear_apply(p, x, SPLIT_CFG)
-        y_two = analog_linear_apply(p, x, SPLIT_CFG.replace(
+        y_fused = apply_linear(p, x, SPLIT_CFG)
+        y_two = apply_linear(p, x, SPLIT_CFG.replace(
             fused_split=False))
         np.testing.assert_array_equal(np.asarray(y_fused),
                                       np.asarray(y_two))
@@ -114,7 +114,7 @@ class TestAnalogPlan:
         y2 = E.run(plan, x)
         np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
         # and equals the legacy per-call wrapper
-        y3 = analog_linear_apply(p, x, SPLIT_CFG)
+        y3 = apply_linear(p, x, SPLIT_CFG)
         np.testing.assert_array_equal(np.asarray(y1), np.asarray(y3))
 
     def test_plan_is_jit_reusable_pytree(self):
@@ -168,7 +168,7 @@ class TestAnalogPlan:
 
         run_jaxpr = jax.make_jaxpr(lambda pl_, x_: E.run(pl_, x_))(plan, x)
         apply_jaxpr = jax.make_jaxpr(
-            lambda p_, x_: analog_linear_apply(p_, x_, SPLIT_CFG)
+            lambda p_, x_: apply_linear(p_, x_, SPLIT_CFG)
         )(p, x)
         assert count_wscale_divs(run_jaxpr.jaxpr) == 0
         assert count_wscale_divs(apply_jaxpr.jaxpr) > 0
@@ -198,14 +198,14 @@ class TestAnalogPlan:
     def test_prelowered_cfg_mismatch_falls_back(self):
         """A baked plan with different static attrs than the call-site cfg
         must not be used (per-call lowering takes over)."""
-        from repro.exec.lower import prelower_tree
+        from repro import api
 
         p = _mk()
         x = jnp.abs(jax.random.normal(KEY, (4, 256))) * 0.2
-        lowered = prelower_tree(p, SPLIT_CFG)          # bakes "split"
+        lowered = api.lower_tree(p, SPLIT_CFG)         # bakes "split"
         cfg_none = SPLIT_CFG.replace(signed_input="none")
-        y1 = analog_linear_apply(lowered, x, cfg_none)
-        y2 = analog_linear_apply(p, x, cfg_none)
+        y1 = apply_linear(lowered, x, cfg_none)
+        y2 = apply_linear(p, x, cfg_none)
         np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
 
     def test_weight_tied_layers_get_float_glue(self):
@@ -223,16 +223,16 @@ class TestAnalogPlan:
                                       np.asarray(E.run(untied, x)))
 
     def test_prelowered_params_shortcut(self):
-        from repro.exec.lower import prelower_tree
+        from repro import api
 
         p = _mk()
         x = jax.random.normal(KEY, (4, 256)) * 0.2
         tree = {"layer": p, "other": {"scale": jnp.ones((4,))}}
-        lowered = prelower_tree(tree, SPLIT_CFG)
+        lowered = api.lower_tree(tree, SPLIT_CFG)
         assert "_plan" in lowered["layer"]
         assert "_plan" not in lowered["other"]
-        y1 = analog_linear_apply(lowered["layer"], x, SPLIT_CFG)
-        y2 = analog_linear_apply(p, x, SPLIT_CFG)
+        y1 = apply_linear(lowered["layer"], x, SPLIT_CFG)
+        y2 = apply_linear(p, x, SPLIT_CFG)
         np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
 
 
@@ -241,10 +241,10 @@ class TestDispatchCounts:
         p = _mk()
         x = jax.random.normal(KEY, (8, 256)) * 0.2
         reset_dispatch_count()
-        analog_linear_apply(p, x, SPLIT_CFG)
+        apply_linear(p, x, SPLIT_CFG)
         fused = dispatch_count()
         reset_dispatch_count()
-        analog_linear_apply(p, x, SPLIT_CFG.replace(fused_split=False))
+        apply_linear(p, x, SPLIT_CFG.replace(fused_split=False))
         two_pass = dispatch_count()
         assert (fused, two_pass) == (1, 2)
 
@@ -298,8 +298,12 @@ class TestECGPlanExecutor:
         x = jnp.round(
             jax.random.uniform(jax.random.PRNGKey(1), (4, 2, 126)) * 31
         )
+        from repro import api
+
         acfg = AnalogConfig()
-        plan = ECG.ecg_lower(params, acfg, cfg)
+        plan = api.compile(
+            ECG.ecg_module_spec(cfg), params, acfg
+        ).lower()
         y_plan = ECG.ecg_apply_plan(plan, x, cfg)
         y_mod = ECG.ecg_apply(params, x, acfg, cfg)
         np.testing.assert_array_equal(np.asarray(y_plan),
@@ -313,13 +317,16 @@ class TestECGPlanExecutor:
         x = jnp.round(
             jax.random.uniform(jax.random.PRNGKey(1), (4, 2, 126)) * 31
         )
+        from repro import api
+
         acfg = AnalogConfig()
-        plan_ste = ECG.ecg_lower(params, acfg.replace(use_pallas=True),
-                                 cfg, epilogue="relu_shift")
-        plan_fused = ECG.ecg_lower(
-            params, acfg.replace(use_pallas=True, fused_epilogue=True),
-            cfg, epilogue="relu_shift",
-        )
+        spec = ECG.ecg_module_spec(cfg, epilogue="relu_shift")
+        plan_ste = api.compile(
+            spec, params, acfg.replace(use_pallas=True)
+        ).lower()
+        plan_fused = api.compile(
+            spec, params, acfg.replace(use_pallas=True, fused_epilogue=True)
+        ).lower()
         y_ste = ECG.ecg_apply_plan(plan_ste, x, cfg)
         y_fused = ECG.ecg_apply_plan(plan_fused, x, cfg)
         np.testing.assert_array_equal(np.asarray(y_ste),
@@ -652,7 +659,7 @@ class TestHILGradientParity:
         cfg = AnalogConfig(signed_input="none")
 
         def loss(params, use_pallas):
-            y = analog_linear_apply(
+            y = apply_linear(
                 params, jnp.abs(x), cfg.replace(use_pallas=use_pallas)
             )
             return (y ** 2).mean()
@@ -683,7 +690,7 @@ class TestHILGradientParity:
         x = jax.random.normal(KEY, (16, 256)) * 0.3
 
         def loss(params, fused):
-            y = analog_linear_apply(
+            y = apply_linear(
                 params, x, SPLIT_CFG.replace(fused_split=fused)
             )
             return (y ** 2).mean()
