@@ -306,6 +306,72 @@ def megakernel_vs_per_layer_throughput(iters: int = 10) -> dict:
     return out
 
 
+def attention_block_megakernel_throughput(iters: int = 10) -> dict:
+    """Fused attention+MLP block: megakernel vs per-layer replay (ISSUE 6).
+
+    One transformer block (d=256, 4 heads, d_ff=512) lowered with
+    ``lower_block`` and replayed on a static [8, 32, 256] prefill three
+    ways through the SAME plan / the same parameters:
+
+    - ``megakernel``: ONE ``pallas_call`` - fused QKV, RoPE+causal
+      attention, o, residual+RMSNorm, up/gate, SwiGLU, down all inside
+      the kernel (1 dispatch),
+    - ``per_layer``: the 4-dispatch block fallback (same plan,
+      ``megakernel=False``),
+    - ``model_path``: the unfused ``_layer_apply`` reference (per-call
+      lowering, its own dispatch count recorded) for context.
+
+    Outputs are bit-exact across all three under fp32 activations (gated
+    in tests); ``speedup`` (megakernel vs per_layer) is the CI-gated
+    entry.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ArchConfig, RunConfig
+    from repro.core.analog import AnalogConfig
+    from repro.exec.lower import lower_block
+    from repro.exec.run import dispatch_count, reset_dispatch_count
+    from repro.exec.run import run as run_plan
+    from repro.models import transformer as T
+
+    cfg = ArchConfig(name="bench", family="dense", n_layers=1, d_model=256,
+                     n_heads=4, n_kv_heads=4, d_ff=512, vocab_size=32,
+                     remat=False)
+    acfg = AnalogConfig(act_calib="static")
+    p = T._layer_init(jax.random.PRNGKey(0), "attn_mlp", cfg)
+    seq, b = 32, 8
+    plan = lower_block(
+        p, acfg, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd, seq=seq, rope_theta=cfg.rope_theta,
+    )
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, seq, cfg.d_model)) * 0.5
+
+    out = {"shape": f"block[{b}x{seq}x{cfg.d_model}]ff{cfg.d_ff}"}
+    for name, mk in (("per_layer", False), ("megakernel", True)):
+        reset_dispatch_count()
+        run_plan(plan, x, megakernel=mk)
+        out[f"{name}_dispatches"] = dispatch_count()
+        out[f"{name}_us"] = _best_of(
+            jax.jit(lambda c, mk=mk: run_plan(plan, c, megakernel=mk)), x,
+            iters=iters,
+        )
+    run_cfg = RunConfig(analog=acfg, activation_dtype="float32")
+    positions = jnp.broadcast_to(jnp.arange(seq)[None], (b, seq))
+
+    def model_path(c):
+        return T._layer_apply(p, "attn_mlp", c, cfg=cfg, run=run_cfg,
+                              positions=positions, cache=None, key=None)[0]
+
+    reset_dispatch_count()
+    model_path(x)
+    out["model_path_dispatches"] = dispatch_count()
+    out["model_path_us"] = _best_of(jax.jit(model_path), x, iters=iters)
+    out["speedup"] = out["per_layer_us"] / out["megakernel_us"]
+    out["model_path_speedup"] = out["model_path_us"] / out["megakernel_us"]
+    return out
+
+
 def _best_of(f, *args, iters=10, warmup=3, blocks=4):
     import jax
 

@@ -14,7 +14,9 @@ forwarding here.  :mod:`repro.exec` remains the internal substrate this
 api drives (plans, lowering, the fused executor).
 """
 from repro.api.compile import (  # noqa: F401
+    block_spec,
     compile,
+    compile_block,
     iter_analog_layers,
     lower_tree,
     swap_calibration,

@@ -48,6 +48,7 @@ import jax
 from repro.core.analog import AnalogConfig
 from repro.exec.lower import (
     lower_batch_concat,
+    lower_block,
     lower_expert_stack,
     lower_fused,
     lower_layer,
@@ -60,6 +61,7 @@ from repro.exec.plan import (
     GroupPlan,
 )
 from repro.api.module import (
+    BLOCK,
     STACK,
     TREE,
     GroupSpec,
@@ -433,6 +435,99 @@ def _compile_stack(spec: ModuleSpec, params, acfg: AnalogConfig,
     )
 
 
+# physical devices of one transformer block, in schedule order: the
+# member-name key space of a block's bake-time calibration snapshot
+_BLOCK_MEMBERS = ("wq", "wk", "wv", "wo", "up", "gate", "down")
+
+
+def block_spec(name: str, *, d_model: int, d_ff: int, n_heads: int,
+               n_kv_heads: int, head_dim: int, seq: int,
+               rope_theta: float = 10000.0, eps: float = 1e-5,
+               signed_input: Optional[str] = None) -> ModuleSpec:
+    """Spec for one attention+MLP transformer block compiled as a SINGLE
+    megakernel dispatch.  The four declared layers are the block's analog
+    dispatches in schedule order - the key space of drift-refresh
+    snapshots (:meth:`CompiledModel.with_calibration`); bake-time
+    calibration uses the seven physical member names (``"wq"`` ...
+    ``"down"``) instead, because measurement happens per device, before
+    fusion."""
+    nq = n_heads * head_dim
+    nkv = n_kv_heads * head_dim
+    return ModuleSpec(
+        name=name,
+        layers=(
+            LayerSpec("qkv", d_model, nq + 2 * nkv,
+                      signed_input=signed_input),
+            LayerSpec("o", nq, d_model, signed_input=signed_input),
+            LayerSpec("up_gate", d_model, 2 * d_ff,
+                      signed_input=signed_input),
+            LayerSpec("down", d_ff, d_model, signed_input=signed_input),
+        ),
+        kind=BLOCK,
+        input_domain="float",
+        block_geom={
+            "n_heads": n_heads, "n_kv_heads": n_kv_heads,
+            "head_dim": head_dim, "seq": seq,
+            "rope_theta": rope_theta, "eps": eps,
+        },
+    )
+
+
+def _compile_block(spec: ModuleSpec, params, acfg: AnalogConfig,
+                   calibration=None):
+    g = spec.block_geom
+    calibs = None
+    if calibration is not None:
+        calibs = {m: calibration.layer(m) for m in _BLOCK_MEMBERS}
+    return lower_block(
+        params, acfg,
+        n_heads=g["n_heads"], n_kv_heads=g["n_kv_heads"],
+        head_dim=g["head_dim"], seq=g["seq"],
+        rope_theta=g["rope_theta"], eps=g.get("eps", 1e-5),
+        calibs=calibs,
+    )
+
+
+def compile_block(block_params, run_cfg, *, n_heads: int, n_kv_heads: int,
+                  head_dim: int, seq: int, rope_theta: float = 10000.0,
+                  eps: float = 1e-5, name: str = "block",
+                  calibration=None) -> CompiledModel:
+    """Compile ONE attention+MLP transformer block into a single-dispatch
+    megakernel program.
+
+    ``block_params`` is the standard block node
+    ``{"ln1", "attn": {wq, wk, wv, wo}, "ln2", "mlp": {up, down, gate}}``
+    (:func:`repro.models.transformer._layer_init` layout).  The resulting
+    :class:`CompiledModel` applies as ``model.apply(x)`` with
+    ``x [batch, seq, d_model]`` - the baked prefill ``seq`` is static -
+    and its ``lower()`` artifact is a 4-layer block
+    :class:`~repro.exec.plan.AnalogPlan` whose canonical replay is ONE
+    ``pallas_call`` (``expected_dispatches == 1``).
+
+    Requires an analog mode with ``act_calib='static'`` and
+    ``signed_input`` in ``('none', 'split')`` - every layer of the fused
+    block consumes float activations and encodes them in-kernel at the
+    baked LSB (:func:`repro.exec.lower.lower_block` raises otherwise).
+    Digital mode compiles no analog block at all; run the model path
+    instead.
+
+    ``calibration`` bakes measured tables by PHYSICAL member name
+    (``"wq"``, ``"wk"``, ``"wv"``, ``"wo"``, ``"up"``, ``"gate"``,
+    ``"down"``); drift refresh via :meth:`CompiledModel.with_calibration`
+    keys on the four fused dispatch names instead (``"qkv"``, ``"o"``,
+    ``"up_gate"``, ``"down"``).
+    """
+    attn, mlp = block_params["attn"], block_params["mlp"]
+    spec = block_spec(
+        name,
+        d_model=attn["wq"]["w"].shape[0],
+        d_ff=mlp["up"]["w"].shape[1],
+        n_heads=n_heads, n_kv_heads=n_kv_heads, head_dim=head_dim,
+        seq=seq, rope_theta=rope_theta, eps=eps,
+    )
+    return compile(spec, block_params, run_cfg, calibration=calibration)
+
+
 def compile(spec: ModuleSpec, params, run_cfg, *,  # noqa: A001
             calibration=None) -> CompiledModel:
     """Compile a declared model against concrete parameters.
@@ -454,6 +549,14 @@ def compile(spec: ModuleSpec, params, run_cfg, *,  # noqa: A001
     elif spec.kind == TREE:
         lowered = lower_tree(params, acfg, calibration=calibration,
                              groups=spec.groups)
+    elif spec.kind == BLOCK:
+        if acfg.mode == "digital":
+            raise ValueError(
+                f"spec {spec.name!r}: digital mode compiles no analog "
+                "block megakernel; run the transformer model path "
+                "instead (models.transformer)"
+            )
+        lowered = _compile_block(spec, params, acfg, calibration)
     else:
         raise ValueError(f"unknown spec kind {spec.kind!r}")
     return CompiledModel(spec=spec, params=params, run_cfg=run_cfg,

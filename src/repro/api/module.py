@@ -8,7 +8,7 @@ model's fusion :class:`GroupSpec` declarations, and
 :func:`repro.api.compile` turns (spec, params, run_cfg) into a
 :class:`repro.api.program.CompiledModel`.
 
-Two spec kinds cover every model in this repo:
+Three spec kinds cover every model in this repo:
 
 - ``"stack"``: the layers ARE the model - an ordered chain executed as one
   :class:`repro.exec.plan.AnalogPlan` (the ECG net, the quickstart linear).
@@ -16,6 +16,13 @@ Two spec kinds cover every model in this repo:
   (attention softmax, recurrences, routing stay digital).  The spec lists
   them by dotted path into the params pytree; compile() bakes a plan next
   to each layer's parameters and the host program replays them.
+- ``"block"``: one attention+MLP transformer block whose four analog
+  dispatches (fused QKV, o, fused up/gate, down) AND digital glue
+  (RMSNorms, RoPE+attention, residuals, SwiGLU) execute as a SINGLE
+  megakernel ``pallas_call`` (:func:`repro.exec.lower.lower_block`).
+  ``block_geom`` carries the attention/MLP geometry the in-kernel glue
+  needs (head counts, head_dim, the baked prefill ``seq``, rope_theta,
+  the RMSNorm eps).
 
 Fusion groups (tree specs) are first-class: a :class:`GroupSpec` names the
 layers that replay as ONE analog dispatch and HOW they fuse (paper §II-D:
@@ -49,6 +56,7 @@ from repro.exec.plan import (
 
 STACK = "stack"
 TREE = "tree"
+BLOCK = "block"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -214,6 +222,11 @@ class ModuleSpec:
     matching declared GroupSpec are normalized into ``column_concat``
     groups at construction, so ``spec.groups`` is always the complete,
     immutable fusion declaration ``repro.api.compile`` plans from.
+
+    ``block_geom`` (block kind only, required there) is the static
+    attention/MLP geometry dict consumed by
+    :func:`repro.exec.lower.lower_block`: keys ``n_heads``,
+    ``n_kv_heads``, ``head_dim``, ``seq``, ``rope_theta``, ``eps``.
     """
 
     name: str
@@ -223,8 +236,15 @@ class ModuleSpec:
     param_axes: Any = None
     input_domain: Optional[str] = None
     groups: Tuple[GroupSpec, ...] = ()
+    block_geom: Optional[dict] = None
 
     def __post_init__(self):
+        if self.kind == BLOCK and self.block_geom is None:
+            raise ValueError(
+                f"spec {self.name!r}: block specs need block_geom "
+                "(n_heads/n_kv_heads/head_dim/seq/rope_theta/eps); use "
+                "api.block_spec() to build one"
+            )
         object.__setattr__(self, "layers", tuple(self.layers))
         by_name = {l.name: l for l in self.layers}
         if len(by_name) != len(self.layers):

@@ -93,10 +93,13 @@ class CompiledModel:
         chains ("auto" uses it when eligible, True requires it, False
         forces the layer-by-layer replay); tree specs forward to the host
         program declared by the spec (``spec.apply_fn(model, *args,
-        **kw)``)."""
+        **kw)``).  Block specs take ``(x [batch, seq, d_model], *,
+        key=None, megakernel="auto")`` and replay the whole
+        attention+MLP block - single ``pallas_call`` when routed to the
+        megakernel, 4-dispatch per-layer fallback otherwise."""
         if self.spec.apply_fn is not None:
             return self.spec.apply_fn(self, *args, **kw)
-        if self.spec.kind != "stack":
+        if self.spec.kind not in ("stack", "block"):
             raise ValueError(
                 f"spec {self.spec.name!r} declares no apply_fn"
             )

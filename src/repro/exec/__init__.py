@@ -13,6 +13,7 @@ from repro.exec.lower import (  # noqa: F401
     layer_with_offsets,
     lower,
     lower_batch_concat,
+    lower_block,
     lower_expert_stack,
     lower_fused,
     lower_layer,
@@ -36,6 +37,7 @@ from repro.exec.plan import (  # noqa: F401
     AnalogPlan,
     GroupPlan,
     LayerPlan,
+    BlockGlue,
     MegakernelPack,
     default_shift,
     find_group,

@@ -47,6 +47,7 @@ from repro.exec.plan import (
     INPUT_CODES,
     INPUT_FLOAT,
     AnalogPlan,
+    BlockGlue,
     GroupPlan,  # noqa: F401  (re-exported beside its lowerings)
     LayerPlan,
     MegakernelPack,
@@ -523,77 +524,246 @@ def lower_expert_stack(w, cfg: AnalogConfig) -> LayerPlan:
     )(params)
 
 
+def lower_block(
+    block_params: Params,
+    cfg: AnalogConfig,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    seq: int,
+    rope_theta: float,
+    eps: float = 1e-5,
+    calibs: Optional[dict] = None,
+) -> AnalogPlan:
+    """Lower ONE attention+MLP transformer block into a 4-layer
+    :class:`AnalogPlan` that replays as a single megakernel dispatch.
+
+    ``block_params`` is the standard block node
+    ``{"ln1", "attn": {wq, wk, wv, wo}, "ln2", "mlp": {up, down, gate}}``
+    (:func:`repro.models.transformer._layer_init` layout).  The three QKV
+    projections fuse into one ``column_concat`` mega-layer
+    (:func:`lower_fused`), up/gate likewise; the digital glue between the
+    four analog dispatches - RoPE + causal attention, residual adds,
+    RMSNorms, SwiGLU - is carried as hand-off tags in the megakernel
+    schedule plus a :class:`~repro.exec.plan.BlockGlue` record, and runs
+    INSIDE the kernel.  ``seq`` is baked: the in-kernel attention needs
+    the static prefill length (positions ``0..seq-1``).
+
+    ``calibs`` optionally maps member names (``"wq"`` ... ``"down"``) to
+    measured :class:`~repro.calib.snapshot.LayerCalibration` records.
+
+    Raises ``ValueError`` with the offending member when the block cannot
+    pack: float-consuming layers need a static input LSB
+    (``act_calib == "static"``) and a none/split signed encoding.
+    """
+    if cfg.act_calib != "static":
+        raise ValueError(
+            "lower_block: every layer of a fused block consumes float "
+            f"activations, and act_calib={cfg.act_calib!r} cannot bake "
+            "the in-kernel encoding LSB; lower with act_calib='static' "
+            "(or replay the block per-layer via the model path)"
+        )
+    if cfg.signed_input not in ("none", "split"):
+        raise ValueError(
+            f"lower_block: signed_input {cfg.signed_input!r} is not "
+            "packable in-kernel (the offset encoding's column-sum "
+            "correction stays per-layer); use 'none' or 'split'"
+        )
+    attn, mlp = block_params["attn"], block_params["mlp"]
+    if mlp.get("gate") is None:
+        raise ValueError(
+            "lower_block: the block MLP has no gate projection; the "
+            "fused swiglu hand-off needs act='swiglu'"
+        )
+    cal = calibs or {}
+    qkv = lower_fused(
+        [attn["wq"], attn["wk"], attn["wv"]], cfg,
+        calibs=[cal.get("wq"), cal.get("wk"), cal.get("wv")],
+    )
+    o = lower_layer(attn["wo"], cfg, calib=cal.get("wo"))
+    upgate = lower_fused(
+        [mlp["up"], mlp["gate"]], cfg,
+        calibs=[cal.get("up"), cal.get("gate")],
+    )
+    down = lower_layer(mlp["down"], cfg, calib=cal.get("down"))
+
+    d_model = qkv.k
+    d_ff = mlp["up"]["w"].shape[1]
+    nq = n_heads * head_dim
+    nkv = n_kv_heads * head_dim
+    if qkv.n != nq + 2 * nkv:
+        raise ValueError(
+            f"lower_block: fused QKV width {qkv.n} != "
+            f"n_heads*head_dim + 2*n_kv_heads*head_dim = {nq + 2 * nkv}"
+        )
+    if o.k != nq or o.n != d_model:
+        raise ValueError(
+            f"lower_block: wo maps {o.k}->{o.n}, expected {nq}->{d_model}"
+        )
+    if upgate.n != 2 * d_ff or down.k != d_ff or down.n != d_model:
+        raise ValueError(
+            "lower_block: MLP widths do not chain: "
+            f"up|gate {upgate.k}->{upgate.n}, down {down.k}->{down.n}, "
+            f"expected {d_model}->{2 * d_ff} and {d_ff}->{d_model}"
+        )
+    glue = BlockGlue(
+        ln1=jnp.asarray(block_params["ln1"]["scale"], jnp.float32),
+        ln2=jnp.asarray(block_params["ln2"]["scale"], jnp.float32),
+        n_heads=n_heads, n_kv_heads=n_kv_heads, head_dim=head_dim,
+        seq=seq, rope_theta=rope_theta, d_ff=d_ff, eps=eps,
+    )
+    plan = AnalogPlan(
+        layers=(qkv, o, upgate, down), cfg=cfg,
+        input_domain=INPUT_FLOAT, block=glue,
+    )
+    return dataclasses.replace(plan, mega=pack_megakernel(plan))
+
+
+def _plan_domains(plan: AnalogPlan):
+    """Walk the hand-off domains of a lowered chain: ``domains[i]`` is the
+    domain layer i CONSUMES ("codes" | "float"), derived from the plan's
+    input domain and each previous layer's epilogue (relu_shift emits
+    codes; "none" dequantizes to float)."""
+    domains = []
+    d = "codes" if plan.input_domain == INPUT_CODES else "float"
+    for lp in plan.layers:
+        domains.append(d)
+        d = "codes" if lp.epilogue == EPILOGUE_RELU_SHIFT else "float"
+    return domains
+
+
 def megakernel_ineligible_reason(plan: AnalogPlan) -> Optional[str]:
     """Structural megakernel eligibility of a lowered plan; returns None
-    when eligible, else a human-readable reason (the fallback matrix the
-    README documents).  Run-time conditions (deterministic replay, batch
-    shape) are checked in :func:`repro.exec.run.run`."""
+    when eligible, else a reason naming the first offending layer and its
+    hand-off domain/epilogue (the fallback matrix the README documents).
+    Run-time conditions (deterministic replay, batch shape) are checked
+    in :func:`repro.exec.run.run`.
+
+    Since ISSUE 6 the chain no longer has to stay in the code domain:
+    float-domain hand-offs pack too (the kernel dequantizes, applies the
+    ReLU glue and re-encodes at the baked static LSB in-kernel), as long
+    as every float-consuming layer has a static input encoding to bake
+    (``act_calib == "static"`` and a none/split signed mode).  Block
+    plans (:func:`lower_block`) are validated at lower time and always
+    eligible."""
     layers = plan.layers
+    if plan.block is not None:
+        return None
     if len(layers) < 2:
         return "megakernel needs a stack of >= 2 layers"
-    if plan.input_domain != INPUT_CODES:
-        return "plan input is not in the code domain"
+    domains = _plan_domains(plan)
+    last = len(layers) - 1
     for i, lp in enumerate(layers):
+        where = (
+            f"layer {i} (consumes {domains[i]!r}, epilogue {lp.epilogue!r})"
+        )
         if getattr(lp.w_eff, "ndim", 2) != 2:
-            return "scan-stacked (vmapped) layer plans are not packable"
+            return f"{where}: scan-stacked (vmapped) plans are not packable"
         if lp.chunk_rows != layers[0].chunk_rows:
-            return "layers disagree on chunk geometry"
-        if i < len(layers) - 1:
-            if lp.epilogue != EPILOGUE_RELU_SHIFT:
+            return (
+                f"{where}: chunk geometry {lp.chunk_rows} disagrees with "
+                f"layer 0 ({layers[0].chunk_rows})"
+            )
+        if domains[i] == "float":
+            # in-kernel re-encoding needs a compile-time activation LSB:
+            # dynamic calibration derives the scale from the live
+            # activations, which do not exist at pack time
+            if plan.cfg.act_calib != "static":
                 return (
-                    f"layer {i} hands off floats (epilogue "
-                    f"{lp.epilogue!r}); the chain must stay in the code "
-                    "domain end to end"
+                    f"{where}: float activations under act_calib="
+                    f"{plan.cfg.act_calib!r} cannot be encoded in-kernel; "
+                    "the baked static LSB needs act_calib='static'"
                 )
+            if lp.signed_input not in ("none", "split"):
+                return (
+                    f"{where}: signed_input {lp.signed_input!r} is not "
+                    "packable (the offset encoding's column-sum "
+                    "correction stays per-layer); use 'none' or 'split'"
+                )
+        if i < last:
             nxt = layers[i + 1]
             if lp.flatten_out:
                 if nxt.k % lp.n:
                     return (
-                        f"flatten at layer {i}: next k={nxt.k} is not a "
-                        f"multiple of n={lp.n}"
+                        f"{where}: flatten hand-off width n={lp.n} does "
+                        f"not divide layer {i + 1} width k={nxt.k}"
                     )
             elif nxt.k != lp.n:
                 return (
-                    f"layer {i} width {lp.n} does not feed layer "
-                    f"{i + 1} width {nxt.k}"
+                    f"{where}: hand-off width n={lp.n} does not feed "
+                    f"layer {i + 1} width k={nxt.k}"
                 )
         elif lp.epilogue != EPILOGUE_NONE:
-            return "last layer must dequantize (epilogue 'none')"
+            return (
+                f"{where}: the last layer must dequantize "
+                "(epilogue 'none')"
+            )
     return None
 
 
 def pack_megakernel(plan: AnalogPlan) -> Optional[MegakernelPack]:
-    """Pack a code-domain :class:`AnalogPlan` into the stacked operands +
+    """Pack an eligible :class:`AnalogPlan` into the stacked operands +
     static schedule the whole-plan Pallas megakernel consumes
     (:func:`repro.kernels.analog_plan.analog_plan_pallas`), or None when
-    the plan is structurally ineligible (mixed/float/stacked chains keep
-    the layer-by-layer executor).
+    the plan is structurally ineligible (see
+    :func:`megakernel_ineligible_reason`; stacked/dynamic-calib-float
+    chains keep the layer-by-layer executor).
 
     Per-layer ``w_eff`` / ``gain`` / ``chunk_offset`` tables are column-
     padded to one common lane width and row-concatenated - column padding
     is inert by construction (zero weights x zero gain x zero offset
     accumulate to zero ADC codes), and each layer's zero output columns
     double as the next layer's chunk padding, exactly like the executor's
-    ``_pad_codes``.
+    ``_pad_codes``.  Chains with float-domain hand-offs additionally get
+    the in-kernel glue leaves packed: per-column dequantization rows
+    (``in_scale * w_scale / gain`` - the exact per-layer dequant
+    expression), bias rows, and the static input-encoding LSB of every
+    float-consuming layer.  Block plans (:func:`lower_block`) carry the
+    attention+MLP hand-off tags and the RMSNorm scale rows.
     """
     from repro.kernels.analog_plan import MegaLayerMeta
 
-    if megakernel_ineligible_reason(plan) is not None:
+    if plan.block is None and megakernel_ineligible_reason(plan) is not None:
         return None
     layers = plan.layers
     last = len(layers) - 1
+    block_meta = None
 
-    # flatten factor INTO the next layer (the im2col position merge) and
-    # the resulting rows-per-batch-row multiplier at each layer's input
-    factors = []
-    for i, lp in enumerate(layers):
-        if i < last and lp.flatten_out:
-            factors.append(layers[i + 1].k // lp.n)
-        else:
-            factors.append(1)
-    m_mults = [1] * len(layers)
-    for i in range(last - 1, -1, -1):
-        m_mults[i] = m_mults[i + 1] * factors[i]
+    if plan.block is not None:
+        bg = plan.block
+        block_meta = bg.meta
+        handoffs = ("attn", "res_ln", "swiglu", "res_out")
+        domains = ["float"] * len(layers)
+        factors = [1] * len(layers)
+        # every layer of a block sees seq rows per batch element (the
+        # whole prefill sequence streams through one grid step so the
+        # in-kernel attention sees its full causal context)
+        m_mults = [bg.seq] * len(layers)
+    else:
+        domains = _plan_domains(plan)
+        handoffs = tuple(
+            ("codes" if lp.epilogue == EPILOGUE_RELU_SHIFT else "relu")
+            if i < last else "raw"
+            for i, lp in enumerate(layers)
+        )
+        # flatten factor INTO the next layer (the im2col position merge)
+        # and the resulting rows-per-batch-row multiplier at each input
+        factors = []
+        for i, lp in enumerate(layers):
+            if i < last and lp.flatten_out:
+                factors.append(layers[i + 1].k // lp.n)
+            else:
+                factors.append(1)
+        m_mults = [1] * len(layers)
+        for i in range(last - 1, -1, -1):
+            m_mults[i] = m_mults[i + 1] * factors[i]
+
+    encodes = [
+        "codes" if d == "codes"
+        else ("split" if lp.signed_input == "split" else "unsigned")
+        for d, lp in zip(domains, layers)
+    ]
 
     lane = 128
     n_max = max(
@@ -602,7 +772,11 @@ def pack_megakernel(plan: AnalogPlan) -> Optional[MegakernelPack]:
     )
     n_max = -(-n_max // lane) * lane
 
+    needs_extras = any(e != "codes" for e in encodes) or any(
+        h not in ("codes", "raw") for h in handoffs
+    )
     schedule, w_blocks, gain_rows, off_blocks = [], [], [], []
+    deq_rows, bias_rows, enc_rows = [], [], []
     row0 = c0 = 0
     for i, lp in enumerate(layers):
         k_pad = lp.w_eff.shape[0]
@@ -619,14 +793,55 @@ def pack_megakernel(plan: AnalogPlan) -> Optional[MegakernelPack]:
             else jnp.zeros((n_chunks, lp.n), jnp.float32)
         )
         off_blocks.append(jnp.pad(off, ((0, 0), (0, n_max - lp.n))))
+        if needs_extras:
+            # the static input LSB this layer encodes (and therefore
+            # dequantizes) with: the snapshot-calibrated shared group
+            # scale when present, else the layer's own - the same
+            # preference order as run_layer; 1.0 for raw code inputs
+            if encodes[i] == "codes":
+                in_scale = jnp.float32(1.0)
+            else:
+                in_scale = jnp.asarray(
+                    lp.a_scale_in if lp.a_scale_in is not None
+                    else lp.a_scale, jnp.float32,
+                ).reshape(())
+            enc_rows.append(in_scale[None])
+            gain_b = jnp.broadcast_to(
+                jnp.asarray(lp.gain, jnp.float32), (lp.n,)
+            )
+            # per-column dequant row: EXACTLY run_layer's expression
+            # (product first, then the gain divide) for bit-exactness
+            deq = (in_scale * lp.w_scale.reshape(-1)) / gain_b
+            deq_rows.append(jnp.pad(deq, (0, n_max - lp.n)))
+            bias = (
+                jnp.asarray(lp.bias, jnp.float32) if lp.bias is not None
+                else jnp.zeros((lp.n,), jnp.float32)
+            )
+            bias_rows.append(jnp.pad(bias, (0, n_max - lp.n)))
         schedule.append(MegaLayerMeta(
             row0=row0, c0=c0, k=lp.k, k_pad=k_pad, n=lp.n,
             n_chunks=n_chunks, shift=lp.shift,
             relu_shift=lp.epilogue == EPILOGUE_RELU_SHIFT,
             flatten=factors[i], m_mult=m_mults[i],
+            encode=encodes[i], handoff=handoffs[i],
         ))
         row0 += k_pad
         c0 += n_chunks
+    extras = {}
+    if needs_extras:
+        extras = dict(
+            deq=jnp.stack(deq_rows, axis=0),
+            bias=jnp.stack(bias_rows, axis=0),
+            enc=jnp.stack(enc_rows, axis=0),
+        )
+        if plan.block is not None:
+            bg = plan.block
+            d0 = layers[0].k
+            ln = jnp.zeros((2, n_max), jnp.float32)
+            ln = ln.at[0, :d0].set(jnp.asarray(bg.ln1, jnp.float32))
+            ln = ln.at[1, :layers[1].n].set(
+                jnp.asarray(bg.ln2, jnp.float32))
+            extras["ln"] = ln
     return MegakernelPack(
         w_cat=jnp.concatenate(w_blocks, axis=0),
         gain=jnp.stack(gain_rows, axis=0),
@@ -634,6 +849,8 @@ def pack_megakernel(plan: AnalogPlan) -> Optional[MegakernelPack]:
         schedule=tuple(schedule),
         n_max=n_max,
         chunk_rows=layers[0].chunk_rows,
+        block=block_meta,
+        **extras,
     )
 
 

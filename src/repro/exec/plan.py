@@ -212,7 +212,7 @@ def find_group(groups, kind: str, member_names: Tuple[str, ...]
 
 @dataclasses.dataclass(frozen=True)
 class MegakernelPack:
-    """Kernel-ready packing of a code-domain AnalogPlan for the whole-plan
+    """Kernel-ready packing of an AnalogPlan chain for the whole-plan
     Pallas megakernel (built once by :func:`repro.exec.lower.pack_megakernel`).
 
     Array fields (pytree leaves):
@@ -221,12 +221,24 @@ class MegakernelPack:
       gain:     [L, n_max] per-layer analog gains (broadcast + padded).
       off:      [sum(n_chunks), n_max] per-layer chunk offsets (zeros where
                 a layer has none), chunk-concatenated.
+      deq:      [L, n_max] per-layer in-kernel dequantization rows
+                (``a_scale * w_scale / gain`` per column; zeros for
+                code-domain hand-offs) or None for pure code chains.
+      bias:     [L, n_max] per-layer digital biases (zeros where a layer
+                has none) or None.
+      enc:      [L, 1] per-layer static input-encoding LSBs (1.0 for
+                codes-consuming layers) or None.
+      ln:       [2, n_max] transformer-block RMSNorm scales (rows: ln1,
+                ln2, zero-padded) or None for non-block chains.
 
     Static fields:
       schedule:   tuple of :class:`repro.kernels.analog_plan.MegaLayerMeta`
-                  (row offsets, chunk geometry, shifts, flatten factors).
+                  (row offsets, chunk geometry, shifts, flatten factors,
+                  per-layer encode/hand-off domain tags).
       n_max:      packed lane width (max layer output, 128-aligned).
       chunk_rows: rows per analog chunk (uniform across the chain).
+      block:      :class:`repro.kernels.analog_plan.BlockMeta` static
+                  attention+MLP glue geometry, or None.
     """
 
     w_cat: jax.Array
@@ -235,12 +247,72 @@ class MegakernelPack:
     schedule: tuple
     n_max: int
     chunk_rows: int
+    deq: Optional[jax.Array] = None
+    bias: Optional[jax.Array] = None
+    enc: Optional[jax.Array] = None
+    ln: Optional[jax.Array] = None
+    block: Optional[tuple] = None
+
+    @property
+    def extras(self):
+        """The float-glue operand tuple the kernel dispatch consumes
+        (``None`` for a pure code-domain pack)."""
+        if self.deq is None:
+            return None
+        return (self.deq, self.bias, self.enc, self.ln)
 
 
 jax.tree_util.register_dataclass(
     MegakernelPack,
-    data_fields=["w_cat", "gain", "off"],
-    meta_fields=["schedule", "n_max", "chunk_rows"],
+    data_fields=["w_cat", "gain", "off", "deq", "bias", "enc", "ln"],
+    meta_fields=["schedule", "n_max", "chunk_rows", "block"],
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockGlue:
+    """The digital glue of one fused attention+MLP transformer block
+    (frozen pytree), attached to an :class:`AnalogPlan` lowered by
+    :func:`repro.exec.lower.lower_block`.
+
+    Array fields (pytree leaves): the two RMSNorm scales (``ln1`` before
+    QKV, ``ln2`` before the MLP) - calibration-free digital parameters
+    that ride along so the per-layer fallback replay and the megakernel
+    repack see the same leaves.
+
+    Static fields: the attention/MLP geometry.  ``meta`` renders it as
+    the hashable :class:`repro.kernels.analog_plan.BlockMeta` the kernel
+    schedule consumes.
+    """
+
+    ln1: jax.Array
+    ln2: jax.Array
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    seq: int
+    rope_theta: float
+    d_ff: int
+    eps: float = 1e-5
+
+    @property
+    def meta(self):
+        from repro.kernels.analog_plan import BlockMeta
+
+        return BlockMeta(
+            n_heads=self.n_heads, n_kv_heads=self.n_kv_heads,
+            head_dim=self.head_dim, seq=self.seq,
+            rope_theta=self.rope_theta, d_ff=self.d_ff, eps=self.eps,
+        )
+
+
+jax.tree_util.register_dataclass(
+    BlockGlue,
+    data_fields=["ln1", "ln2"],
+    meta_fields=[
+        "n_heads", "n_kv_heads", "head_dim", "seq", "rope_theta", "d_ff",
+        "eps",
+    ],
 )
 
 
@@ -253,15 +325,19 @@ class AnalogPlan:
     ``input_domain`` ("codes" | "float" | None) states what the plan's
     INITIAL input is - baked at lower time; None (manually-built plans)
     falls back to the legacy first-layer-epilogue inference in ``run``.
-    ``mega`` is the optional megakernel packing: present iff the plan is a
-    pure code-domain chain (see :func:`repro.exec.lower.pack_megakernel`),
-    consumed by the whole-plan Pallas kernel in ``run``.
+    ``mega`` is the optional megakernel packing: present iff the chain is
+    megakernel-eligible (see :func:`repro.exec.lower.pack_megakernel` and
+    :func:`repro.exec.lower.megakernel_ineligible_reason`), consumed by
+    the whole-plan Pallas kernel in ``run``.  ``block`` is the optional
+    attention+MLP glue of a plan lowered by
+    :func:`repro.exec.lower.lower_block`.
     """
 
     layers: Tuple[LayerPlan, ...]
     cfg: AnalogConfig
     mega: Optional[MegakernelPack] = None
     input_domain: Optional[str] = None
+    block: Optional[BlockGlue] = None
 
     def __len__(self) -> int:
         return len(self.layers)
@@ -287,6 +363,11 @@ class AnalogPlan:
         time, so counting a cached-jit replay observes 0 and a counter-
         only assertion can pass vacuously.  (The megakernel route issues
         exactly 1 dispatch instead.)"""
+        if self.block is not None:
+            # a fused attention+MLP block's canonical replay IS the
+            # megakernel: one dispatch for the whole block (the
+            # per-layer fallback costs 4; see run._run_block_fallback)
+            return 1
         is_codes = self.expects_codes
         n = 0
         last = len(self.layers) - 1
@@ -302,6 +383,6 @@ class AnalogPlan:
 
 jax.tree_util.register_dataclass(
     AnalogPlan,
-    data_fields=["layers", "mega"],
+    data_fields=["layers", "mega", "block"],
     meta_fields=["cfg", "input_domain"],
 )

@@ -16,12 +16,15 @@ Responsibilities left at run time (everything else was baked by
   Pallas kernel, so a stacked plan (the ECG conv->fc1->fc2 chain) runs as
   one jitted analog program with no float glue between layers,
 - temporal readout noise keys (mock-mode training),
-- megakernel routing: a pure code-domain plan (packed at lower time, see
+- megakernel routing: an eligible plan (packed at lower time, see
   ``exec.lower.pack_megakernel``) replays as ONE dispatch - the whole
-  chain in a single ``pallas_call`` with VMEM-resident inter-layer codes
-  (``cfg.use_pallas``), or as one fused jnp chain otherwise.  Mixed,
-  noisy and float-input plans fall back to the layer-by-layer path;
-  ``run(..., megakernel=True)`` raises instead of silently falling back.
+  chain in a single ``pallas_call`` with VMEM-resident inter-layer
+  activations (``cfg.use_pallas``), or as one fused jnp chain otherwise.
+  Code-domain chains, static-calib float/mixed chains and fused
+  attention+MLP block plans (``plan.block``) all take this route; noisy
+  replay, dynamic-calib float hand-offs and stacked plans fall back to
+  the layer-by-layer path; ``run(..., megakernel=True)`` raises with the
+  first offending layer instead of silently falling back.
 
 Dispatch accounting: every analog pass issued by the executor bumps
 :data:`ANALOG_DISPATCHES` at trace time - tests and benchmarks use
@@ -50,6 +53,16 @@ from repro.exec.plan import (
 )
 
 ANALOG_DISPATCHES = 0
+
+# Small-batch guard for megakernel="auto": route calls with fewer final
+# batch rows than this to the per-layer replay.  After the bounded
+# rows-per-grid-step fix (kernels.analog_plan.default_block_b) the
+# megakernel measures FASTER than the per-layer replay at every batch
+# size on this target (b=1: 6.4x .. b=64: 1.5x on the ECG chain), so the
+# default threshold of 1 never fires - the knob exists so a target where
+# tiny batches lose can raise it without code changes (megakernel=True
+# always overrides it).
+MEGAKERNEL_MIN_ROWS = 1
 
 
 def reset_dispatch_count() -> None:
@@ -350,27 +363,34 @@ def _megakernel_batch_shape(plan: AnalogPlan, x: jax.Array):
 def _run_megakernel(
     plan: AnalogPlan, x: jax.Array, lead: tuple
 ) -> jax.Array:
-    """Replay a packed code-domain plan as ONE analog dispatch: the whole
-    chain inside a single ``pallas_call`` (or one fused jnp chain on the
-    non-Pallas path), inter-layer 5-bit codes VMEM-resident.  Bit-exact
-    vs the layer-by-layer replay (same per-chunk ADC arithmetic, same
-    floor-shift epilogue, same dequantization expression - tested)."""
+    """Replay a packed plan as ONE analog dispatch: the whole chain inside
+    a single ``pallas_call`` (or one fused jnp chain on the non-Pallas
+    path), inter-layer activations - 5-bit codes or re-encoded float
+    features - VMEM-resident.  Bit-exact vs the layer-by-layer replay
+    (same per-chunk ADC arithmetic, same floor-shift epilogue, same
+    static encoding LSB and dequantization expression - tested)."""
     from repro.kernels import ops as kernel_ops
 
     cfg, mega = plan.cfg, plan.mega
     lp = plan.layers[-1]
     x2 = x.astype(jnp.float32).reshape(-1, x.shape[-1])
-    x2 = _pad_codes(x2, plan.layers[0].w_eff.shape[0])
+    if mega.schedule[0].encode == "codes":
+        x2 = _pad_codes(x2, plan.layers[0].w_eff.shape[0])
     _count()
     y_int = kernel_ops.analog_plan_codes(
         x2, mega.w_cat, mega.gain, mega.off,
         schedule=mega.schedule, chunk_rows=mega.chunk_rows,
         faithful=cfg.mode != "analog_fast", use_pallas=cfg.use_pallas,
+        extras=mega.extras,
     )
     y_int = y_int.reshape(lead + (lp.n,))
-    # identical dequantization to run_layer's epilogue == "none" hand-off
-    # (codes in, so a_scale == 1)
-    a_scale = jnp.asarray(1.0, jnp.float32)
+    # identical dequantization to run_layer's epilogue == "none" hand-off:
+    # the LSB the last layer's input was actually encoded at (1.0 for raw
+    # codes; the baked static scale when the kernel re-encoded floats)
+    if mega.schedule[-1].encode == "codes":
+        a_scale = jnp.asarray(1.0, jnp.float32)
+    else:
+        a_scale = lp.a_scale_in if lp.a_scale_in is not None else lp.a_scale
     y = y_int * (a_scale * lp.w_scale.reshape(-1) / lp.gain)
     if lp.bias is not None:
         y = y + lp.bias
@@ -385,21 +405,45 @@ def _megakernel_route(
     cfg: AnalogConfig,
     key: Optional[jax.Array],
     x_is_codes: bool,
+    forced: bool = False,
 ):
     """Resolve the megakernel route for one ``run`` call: the output
     batch-shape tuple when it can be taken, else a reason string.
     Structural ineligibility is decided at lower time (no ``mega``
-    packing baked), the rest here - noisy replay and batch-shape
-    mismatches keep the layer-by-layer path."""
+    packing baked); noisy replay, entry-domain mismatches, sub-threshold
+    batches (``megakernel="auto"`` only) and batch-shape mismatches keep
+    the layer-by-layer path."""
     if plan.mega is None:
         from repro.exec.lower import megakernel_ineligible_reason
 
         return megakernel_ineligible_reason(plan) or "plan was not packed"
-    if not x_is_codes:
-        return "input is float (megakernel chains start in the code domain)"
+    entry = plan.mega.schedule[0].encode
+    if entry == "codes" and not x_is_codes:
+        return (
+            "input is float but the packed chain consumes 5-bit codes "
+            "(layer 0 encode 'codes')"
+        )
+    if entry != "codes" and x_is_codes:
+        return (
+            "input is codes but the packed chain encodes float "
+            f"activations in-kernel (layer 0 encode {entry!r})"
+        )
     if key is not None and not cfg.deterministic:
         return "noisy replay (readout-noise keys) is layer-by-layer"
-    return _megakernel_batch_shape(plan, x)
+    lead = _megakernel_batch_shape(plan, x)
+    if isinstance(lead, str):
+        return lead
+    if not forced:
+        rows = 1
+        for d in lead:
+            rows *= int(d)
+        if rows < MEGAKERNEL_MIN_ROWS:
+            return (
+                f"batch rows {rows} < MEGAKERNEL_MIN_ROWS "
+                f"({MEGAKERNEL_MIN_ROWS}); tiny batches replay per-layer "
+                "(megakernel=True overrides)"
+            )
+    return lead
 
 
 def megakernel_fallback_reason(
@@ -413,6 +457,84 @@ def megakernel_fallback_reason(
     can)."""
     route = _megakernel_route(plan, x, cfg, key, x_is_codes)
     return route if isinstance(route, str) else None
+
+
+def _run_block_fallback(
+    plan: AnalogPlan, x: jax.Array, key: Optional[jax.Array]
+) -> jax.Array:
+    """Per-layer replay of a fused attention+MLP block plan: 4 analog
+    dispatches (fused QKV, o, fused up|gate, down) with the digital glue
+    in jnp - the SAME glue functions the megakernel traces, so the two
+    routes are bit-exact against each other (tested)."""
+    from repro.models.attention import prefill_attention_glue
+    from repro.models.layers import norm_apply
+
+    bg, cfg = plan.block, plan.cfg
+    qkv_lp, o_lp, ug_lp, dn_lp = plan.layers
+    b, s, _ = x.shape
+    ks = list(jax.random.split(key, 4)) if key is not None else [None] * 4
+    res = x.astype(jnp.float32)
+    h = norm_apply({"scale": bg.ln1}, res, eps=bg.eps)
+    qkv = run_layer(qkv_lp, h, cfg, key=ks[0])
+    nq = bg.n_heads * bg.head_dim
+    o_in = prefill_attention_glue(
+        qkv.reshape(b * s, qkv_lp.n), batch=b, seq=s,
+        n_heads=bg.n_heads, n_kv_heads=bg.n_kv_heads,
+        head_dim=bg.head_dim, rope_theta=bg.rope_theta,
+    )
+    attn_out = run_layer(o_lp, o_in.reshape(b, s, nq), cfg, key=ks[1])
+    res = res + attn_out
+    h = norm_apply({"scale": bg.ln2}, res, eps=bg.eps)
+    ug = run_layer(ug_lp, h, cfg, key=ks[2])
+    up, gate = ug[..., :bg.d_ff], ug[..., bg.d_ff:]
+    y = run_layer(dn_lp, jax.nn.silu(gate) * up, cfg, key=ks[3])
+    return (res + y).astype(x.dtype)
+
+
+def _run_block(
+    plan: AnalogPlan,
+    x: jax.Array,
+    *,
+    key: Optional[jax.Array],
+    megakernel,
+) -> jax.Array:
+    """Execute a block plan (:func:`repro.exec.lower.lower_block`):
+    ``x [batch, seq, d_model]`` -> same shape, the whole attention+MLP
+    block as ONE analog dispatch (5 on the unlowered model path, 4 on the
+    per-layer fallback)."""
+    from repro.kernels import ops as kernel_ops
+
+    bg, cfg, mega = plan.block, plan.cfg, plan.mega
+    if x.ndim != 3 or x.shape[-1] != plan.layers[0].k:
+        raise ValueError(
+            f"block plan expects [batch, seq, {plan.layers[0].k}] float "
+            f"activations, got shape {x.shape}"
+        )
+    if x.shape[1] != bg.seq:
+        raise ValueError(
+            f"block plan was lowered for the static prefill length "
+            f"seq={bg.seq}, got seq={x.shape[1]}; re-lower for this "
+            "length (the in-kernel attention bakes its positions)"
+        )
+    reason = None
+    if megakernel is False:
+        reason = "megakernel=False"
+    elif key is not None and not cfg.deterministic:
+        reason = "noisy replay (readout-noise keys) is layer-by-layer"
+    if reason is not None:
+        if megakernel is True:
+            raise ValueError(f"megakernel=True, but: {reason}")
+        return _run_block_fallback(plan, x, key)
+    b, s, d = x.shape
+    _count()
+    y = kernel_ops.analog_plan_codes(
+        x.astype(jnp.float32).reshape(b * s, d),
+        mega.w_cat, mega.gain, mega.off,
+        schedule=mega.schedule, chunk_rows=mega.chunk_rows,
+        faithful=cfg.mode != "analog_fast", use_pallas=cfg.use_pallas,
+        extras=mega.extras, block=mega.block,
+    )
+    return y.reshape(b, s, d).astype(x.dtype)
 
 
 def run(
@@ -432,24 +554,30 @@ def run(
     first-layer-epilogue inference).
 
     ``megakernel`` selects the whole-plan single-dispatch route for
-    code-domain chains: ``"auto"`` (default) uses it whenever the plan is
-    eligible, ``False`` forces the layer-by-layer replay, ``True``
-    requires it (raises ``ValueError`` with the fallback reason when the
-    plan or call cannot take it).
+    eligible chains (code-domain, static-calib float/mixed, and fused
+    attention+MLP blocks): ``"auto"`` (default) uses it whenever the plan
+    and call are eligible and the batch clears
+    :data:`MEGAKERNEL_MIN_ROWS`, ``False`` forces the layer-by-layer
+    replay, ``True`` requires it (raises ``ValueError`` naming the first
+    offending layer / fallback reason when the plan or call cannot take
+    it, and overrides the small-batch threshold).
     """
     cfg = plan.cfg
     n = len(plan.layers)
+    if megakernel not in (True, False, "auto"):
+        raise ValueError(f"megakernel must be 'auto'|True|False, "
+                         f"got {megakernel!r}")
+    if plan.block is not None:
+        return _run_block(plan, x, key=key, megakernel=megakernel)
     if x_is_codes is None:
         x_is_codes = plan.expects_codes
     if megakernel is True or megakernel == "auto":
-        route = _megakernel_route(plan, x, cfg, key, x_is_codes)
+        route = _megakernel_route(plan, x, cfg, key, x_is_codes,
+                                  forced=megakernel is True)
         if not isinstance(route, str):
             return _run_megakernel(plan, x, route)
         if megakernel is True:
             raise ValueError(f"megakernel=True, but: {route}")
-    elif megakernel is not False:
-        raise ValueError(f"megakernel must be 'auto'|True|False, "
-                         f"got {megakernel!r}")
     ks = list(jax.random.split(key, n)) if key is not None else [None] * n
     is_codes = x_is_codes
     h = x

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.core.hw import BSS2
 from repro.kernels import ref as ref_lib
 from repro.kernels.analog_mvm import analog_mvm_pallas, analog_mvm_split_pallas
+from repro.kernels import analog_plan
 from repro.kernels.analog_plan import analog_plan_pallas
 from repro.kernels.preproc import maxmin_pool_pallas
 
@@ -191,7 +192,7 @@ def analog_mvm_infer(
 
 
 def analog_plan_codes(
-    x_codes: jax.Array,
+    x_in: jax.Array,
     w_cat: jax.Array,
     gain_all: jax.Array,
     off_cat: jax.Array,
@@ -201,63 +202,83 @@ def analog_plan_codes(
     faithful: bool = True,
     use_pallas: Optional[bool] = None,
     block_b: Optional[int] = None,
+    extras=None,
+    block=None,
 ) -> jax.Array:
-    """Whole-plan megakernel dispatch: one packed code-domain layer chain,
-    ONE kernel launch (plan executor megakernel hot path).
+    """Whole-plan megakernel dispatch: one packed layer chain, ONE kernel
+    launch (plan executor megakernel hot path).
 
     On the Pallas path the entire chain runs inside a single
-    ``pallas_call`` with VMEM-resident inter-layer codes; the jnp path
-    traces the identical chain as one fused function
-    (:func:`repro.kernels.ref.analog_plan_ref`).  Returns the final
-    layer's raw accumulated ADC codes ``[B * m_last, n_last]``.
+    ``pallas_call`` with VMEM-resident inter-layer activations; the jnp
+    path traces the identical chain as one fused function
+    (:func:`repro.kernels.ref.analog_plan_ref`).  ``extras`` carries the
+    packed float-glue leaves ``(deq, bias, enc, ln)`` for chains with
+    float-domain hand-offs (None for pure code-domain chains); ``block``
+    is the static :class:`repro.kernels.analog_plan.BlockMeta` geometry
+    of a fused attention+MLP block.  Returns the final layer's raw
+    accumulated ADC codes ``[B * m_last, n_last]`` (hand-off "raw") or
+    the glued float block output (hand-off "res_out").
 
     Differentiable on BOTH paths: the custom VJP backpropagates through
-    the STE/HIL reference chain (frozen gain/offsets, linearized ADC -
-    the same gradients the layer-by-layer replay produces), so compiling
-    a code-domain chain inside a differentiated train step keeps the HIL
-    contract even when the forward ran the Pallas megakernel.
+    the STE/HIL reference chain (frozen gain/offsets, linearized ADC,
+    STE in-kernel encoders - the same gradients the layer-by-layer
+    replay produces), so compiling a chain inside a differentiated train
+    step keeps the HIL contract even when the forward ran the Pallas
+    megakernel.
     """
-    return _plan_codes(x_codes, w_cat, gain_all, off_cat, schedule,
-                       chunk_rows, faithful, use_pallas, block_b)
+    return _plan_codes(x_in, w_cat, gain_all, off_cat, extras, schedule,
+                       chunk_rows, faithful, use_pallas, block_b, block)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
-def _plan_codes(x_codes, w_cat, gain_all, off_cat, schedule, chunk_rows,
-                faithful, use_pallas, block_b):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10))
+def _plan_codes(x_in, w_cat, gain_all, off_cat, extras, schedule,
+                chunk_rows, faithful, use_pallas, block_b, block):
     use = _on_tpu() if use_pallas is None else use_pallas
     if use:
-        b = x_codes.shape[0] // schedule[0].m_mult
-        bb = block_b if block_b is not None else max(1, min(b, 64))
+        b = x_in.shape[0] // schedule[0].m_mult
+        # bounded ROWS per grid step (block_b * m_mult0), not batch
+        # elements: keeps the x/scratch working set flat across chain
+        # geometries (the small-batch im2col grid/scratch fix)
+        bb = block_b if block_b is not None else analog_plan.default_block_b(
+            b, schedule[0].m_mult)
+        deq = bias = enc = ln = None
+        if extras is not None:
+            deq, bias, enc, ln = extras
         return analog_plan_pallas(
-            x_codes, w_cat, gain_all, off_cat,
+            x_in, w_cat, gain_all, off_cat, deq, bias, enc, ln,
             schedule=schedule, chunk_rows=chunk_rows, faithful=faithful,
             block_b=bb, interpret=not _on_tpu(),
             compute_dtype=jnp.bfloat16 if _on_tpu() else jnp.float32,
+            block=block,
         )
     return ref_lib.analog_plan_ref(
-        x_codes, w_cat, gain_all, off_cat, schedule,
+        x_in, w_cat, gain_all, off_cat, schedule,
         chunk_rows=chunk_rows, faithful=faithful,
+        extras=extras, block=block,
     )
 
 
-def _plan_codes_fwd(x_codes, w_cat, gain_all, off_cat, schedule,
-                    chunk_rows, faithful, use_pallas, block_b):
-    y = _plan_codes(x_codes, w_cat, gain_all, off_cat, schedule,
-                    chunk_rows, faithful, use_pallas, block_b)
-    return y, (x_codes, w_cat, gain_all, off_cat)
+def _plan_codes_fwd(x_in, w_cat, gain_all, off_cat, extras, schedule,
+                    chunk_rows, faithful, use_pallas, block_b, block):
+    y = _plan_codes(x_in, w_cat, gain_all, off_cat, extras, schedule,
+                    chunk_rows, faithful, use_pallas, block_b, block)
+    return y, (x_in, w_cat, gain_all, off_cat, extras)
 
 
 def _plan_codes_bwd(schedule, chunk_rows, faithful, use_pallas, block_b,
-                    res, g):
+                    block, res, g):
     # HIL gradient: differentiate the STE reference chain (gain and
-    # offsets are frozen calibration state inside analog_plan_ref)
-    x_codes, w_cat, gain_all, off_cat = res
+    # offsets are frozen calibration state inside analog_plan_ref; the
+    # float-glue leaves in ``extras`` receive real gradients, like the
+    # per-layer dequantization does)
+    x_in, w_cat, gain_all, off_cat, extras = res
     _, vjp = jax.vjp(
-        lambda x_, w_, g_, o_: ref_lib.analog_plan_ref(
+        lambda x_, w_, g_, o_, e_: ref_lib.analog_plan_ref(
             x_, w_, g_, o_, schedule,
             chunk_rows=chunk_rows, faithful=faithful,
+            extras=e_, block=block,
         ),
-        x_codes, w_cat, gain_all, off_cat,
+        x_in, w_cat, gain_all, off_cat, extras,
     )
     return vjp(g)
 

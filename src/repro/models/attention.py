@@ -56,8 +56,11 @@ def _dense_attention(q, k, v, *, causal: bool, q_offset=0,
                    k.astype(jnp.float32)) * scale
     if causal:
         sq, sk = q.shape[1], k.shape[1]
-        qpos = jnp.arange(sq)[:, None] + q_offset
-        kpos = jnp.arange(sk)[None, :]
+        # traced iota (not a concrete arange constant): this mask is also
+        # built inside the fused-block pallas kernel, whose trace may not
+        # capture constants
+        qpos = jax.lax.broadcasted_iota(jnp.int32, (sq, 1), 0) + q_offset
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (1, sk), 1)
         mask = qpos >= kpos
         if window is not None:
             mask &= (qpos - kpos) < window
@@ -65,6 +68,41 @@ def _dense_attention(q, k, v, *, causal: bool, q_offset=0,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
     return o.astype(q.dtype)
+
+
+def prefill_attention_glue(qkv, *, batch: int, seq: int, n_heads: int,
+                           n_kv_heads: int, head_dim: int,
+                           rope_theta: float) -> jax.Array:
+    """The pure digital glue between the fused QKV projection and the
+    output projection for a STATIC prefill (positions ``0..seq-1``, no
+    cache, dense causal attention): split the concatenated QKV columns,
+    apply RoPE, group the query heads, attend.
+
+    ``qkv``: ``[batch * seq, nq + 2 * nkv]`` (the column layout of the
+    ``column_concat`` QKV group) -> ``[batch * seq, nq]``.
+
+    This is THE single definition of that glue: ``attention_apply``'s
+    dense prefill branch, the per-layer block fallback
+    (``repro.exec.run._run_block_fallback``) and the in-kernel "attn"
+    hand-off of the block megakernel
+    (:mod:`repro.kernels.analog_plan`) all trace this same function, so
+    their bit-exactness is by construction rather than by parallel
+    implementations.
+    """
+    nq = n_heads * head_dim
+    nkv = n_kv_heads * head_dim
+    g = n_heads // n_kv_heads
+    qkv = qkv.reshape(batch, seq, nq + 2 * nkv)
+    q, k, v = jnp.split(qkv, [nq, nq + nkv], axis=-1)
+    q = q.reshape(batch, seq, n_heads, head_dim)
+    k = k.reshape(batch, seq, n_kv_heads, head_dim)
+    v = v.reshape(batch, seq, n_kv_heads, head_dim)
+    positions = jax.lax.broadcasted_iota(jnp.int32, (batch, seq), 1)
+    q = L.apply_rope(q, positions, rope_theta)
+    k = L.apply_rope(k, positions, rope_theta)
+    qg = q.reshape(batch, seq, n_kv_heads, g, head_dim)
+    o = _dense_attention(qg, k, v, causal=True)
+    return o.reshape(batch * seq, nq)
 
 
 def _cp_wanted(attn_cp: str, n_heads: int) -> bool:

@@ -114,9 +114,12 @@ def norm_specs(kind="rmsnorm"):
 
 # ------------------------------------------------------------------ RoPE
 def rope_freqs(head_dim: int, theta: float) -> jax.Array:
-    return 1.0 / (
-        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
-    )
+    # lax.iota (a traced op) instead of jnp.arange (a concrete constant):
+    # the frequency table is also built INSIDE the fused-block pallas
+    # kernel, whose trace may not capture constants.  XLA constant-folds
+    # it right back everywhere else.
+    even = 2.0 * jax.lax.iota(jnp.float32, head_dim // 2)
+    return 1.0 / (theta ** (even / head_dim))
 
 
 def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:

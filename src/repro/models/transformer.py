@@ -181,6 +181,18 @@ def lm_specs(cfg: ArchConfig):
 def _layer_apply(p, kind, x, *, cfg, run, positions, cache, key, window=None):
     acfg = run.analog
     new_cache = {}
+    if kind == "attn_mlp":
+        bp = p.get("_block_plan")
+        if (bp is not None and cache is None and window is None
+                and not cfg.mrope and x.shape[1] == bp.block.seq):
+            # pre-lowered fused block plan (attach_block_plans): the
+            # whole attention+MLP block replays as ONE megakernel
+            # dispatch.  Static-prefill only - the baked in-kernel
+            # attention assumes positions 0..seq-1 and no cache; decode
+            # and other lengths keep the per-layer model path below.
+            from repro.exec.run import run as run_plan
+
+            return run_plan(bp, x, key=key), None, 0.0
     if kind in ("attn_mlp", "attn_moe"):
         h = L.norm_apply(p["ln1"], x, cfg.norm)
         attn_out, c = A.attention_apply(
@@ -334,6 +346,49 @@ def lm_apply(params, batch, cfg: ArchConfig, run: RunConfig, *,
     if cache is not None:
         new_cache = {"layers": new_layer_cache, "step": cache["step"] + s}
     return logits, new_cache, aux
+
+
+def attach_block_plans(params, cfg: ArchConfig, acfg, *, seq: int):
+    """Pre-lower every ``attn_mlp`` block of an LM into a fused
+    attention+MLP megakernel plan and attach it as a ``"_block_plan"``
+    leaf beside the block's parameters.  ``lm_apply`` then replays each
+    of those blocks as ONE analog dispatch on static prefills of length
+    ``seq`` (no cache, default positions); decode and other lengths keep
+    the per-layer path untouched.
+
+    The LM's scan groups hold stacked parameters, so the lowering is
+    vmapped over the group axis - the attached plan's leaves carry the
+    same leading stack dim and are sliced per group by the scan, while
+    the static schedule is shared (one compiled kernel for all groups).
+
+    ``acfg`` must be megakernel-eligible (``act_calib == "static"``,
+    none/split signed encoding - see
+    :func:`repro.exec.lower.lower_block`); the architecture must use the
+    glue the kernel bakes (rmsnorm + swiglu, plain RoPE).
+    """
+    if cfg.norm != "rmsnorm" or cfg.act != "swiglu" or cfg.mrope:
+        raise ValueError(
+            "attach_block_plans: the fused block kernel bakes rmsnorm + "
+            f"swiglu + plain RoPE glue; got norm={cfg.norm!r}, "
+            f"act={cfg.act!r}, mrope={cfg.mrope}"
+        )
+    from repro.exec.lower import lower_block
+
+    kinds = group_def(cfg)
+    new_layers = dict(params["layers"])
+    for i, kind in enumerate(kinds):
+        if kind != "attn_mlp":
+            continue
+        node = new_layers[f"l{i}"]
+        block = {k: node[k] for k in ("ln1", "attn", "ln2", "mlp")}
+        plan = jax.vmap(
+            lambda p: lower_block(
+                p, acfg, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.hd, seq=seq, rope_theta=cfg.rope_theta,
+            )
+        )(block)
+        new_layers[f"l{i}"] = {**node, "_block_plan": plan}
+    return {**params, "layers": new_layers}
 
 
 # ------------------------------------------------------------------ cache
