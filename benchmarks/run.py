@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 import time
 
@@ -66,6 +67,23 @@ def smoke() -> None:
     from benchmarks import throughput
 
     t0 = time.time()
+    # static verification FIRST: a dispatch-count / treedef / packing
+    # regression fails the job with a named rule + pytree path instead of
+    # surfacing as an unexplained slowdown in the timings below.  Run in
+    # a subprocess: the sweep compiles ~16 models, and that much jit-cache
+    # and heap in THIS process skews the marginal (~1.0-1.3x) timing
+    # gates below.
+    gate = subprocess.run(
+        [sys.executable, "-m", "repro.verify", "--sweep-only"],
+        capture_output=True, text=True,
+    )
+    if gate.returncode != 0:
+        print("\n== static verification (repro.verify) ==")
+        print(gate.stdout + gate.stderr)
+        print("FAIL: invariant diagnostic(s); not timing a "
+              "structurally-regressed build")
+        sys.exit(1)
+    print("static verification: plans/specs OK")
     kernels_micro()
     pc = throughput.plan_vs_percall_throughput(iters=5)
     print("\n== plan-cached vs per-call requantize (exec layer) ==")

@@ -100,9 +100,8 @@ def plan_vs_percall_throughput(iters: int = 10) -> dict:
     import jax
     import jax.numpy as jnp
 
-    from repro.core.analog import (
-        AnalogConfig, analog_linear_apply, analog_linear_init,
-    )
+    from repro.api import apply_linear
+    from repro.core.analog import AnalogConfig, analog_linear_init
     from repro.core.noise import NOISELESS
     from repro.exec.lower import lower_stack
     from repro.exec.run import dispatch_count, reset_dispatch_count
@@ -119,7 +118,7 @@ def plan_vs_percall_throughput(iters: int = 10) -> dict:
     def percall(x):
         h = x
         for p in layers:
-            h = jax.nn.relu(analog_linear_apply(
+            h = jax.nn.relu(apply_linear(
                 p, h, AnalogConfig(noise=NOISELESS, fused_split=False)
             ))
         return h

@@ -529,7 +529,7 @@ def compile_block(block_params, run_cfg, *, n_heads: int, n_kv_heads: int,
 
 
 def compile(spec: ModuleSpec, params, run_cfg, *,  # noqa: A001
-            calibration=None) -> CompiledModel:
+            calibration=None, verify: bool = True) -> CompiledModel:
     """Compile a declared model against concrete parameters.
 
     ``run_cfg`` is a RunConfig (serve/train) or bare AnalogConfig.  In
@@ -540,6 +540,13 @@ def compile(spec: ModuleSpec, params, run_cfg, *,  # noqa: A001
     ``calibration`` (a ``repro.calib`` CalibrationSnapshot) bakes
     measured gain/offset/scale tables in place of the oracle
     ``params["fpn"]`` - see the module docstring.
+
+    ``verify=True`` (the default) runs the CHEAP static invariant rules
+    (:mod:`repro.verify.invariants`: shape/static-metadata only, so free
+    under jit/grad tracing) over the lowered artifact and raises
+    :class:`repro.verify.VerifyError` on any diagnostic.  The full rule
+    set (drift-swap, sharding coverage) is
+    :meth:`CompiledModel.verify`.
     """
     acfg = _acfg(run_cfg)
     if spec.kind == STACK:
@@ -559,6 +566,15 @@ def compile(spec: ModuleSpec, params, run_cfg, *,  # noqa: A001
         lowered = _compile_block(spec, params, acfg, calibration)
     else:
         raise ValueError(f"unknown spec kind {spec.kind!r}")
+    if verify:
+        from repro.verify import invariants as _inv
+
+        _inv.check(_inv.verify_spec(spec))
+        if lowered is not None:
+            _inv.check(_inv.verify_plan(
+                lowered, spec=spec, calibration=calibration,
+                cheap_only=True,
+            ))
     return CompiledModel(spec=spec, params=params, run_cfg=run_cfg,
                          lowered=lowered, calibration=calibration)
 

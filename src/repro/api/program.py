@@ -174,6 +174,22 @@ class CompiledModel:
             self, lowered=lowered, calibration=snapshot
         )
 
+    def verify(self, *, strict: bool = False, cheap_only: bool = False):
+        """Run the FULL static invariant rule set
+        (:mod:`repro.verify.invariants`) over this model's spec, lowered
+        artifact and baked calibration - including the non-cheap rules
+        ``compile(..., verify=True)`` skips (identity drift-swap treedef
+        pinning, sharding-spec coverage).  Returns the tuple of
+        :class:`repro.verify.Diagnostic` records (empty = clean);
+        ``strict=True`` raises :class:`repro.verify.VerifyError`
+        instead."""
+        from repro.verify import invariants as _inv
+
+        diags = _inv.verify_model(self, cheap_only=cheap_only)
+        if strict:
+            _inv.check(diags)
+        return diags
+
     def group_plan(self, name: str):
         """The lowered :class:`repro.exec.plan.GroupPlan` of a declared
         fusion group - the canonical replacement for reaching into the

@@ -284,10 +284,23 @@ def analog_plan_specs(plan, layer_axes: Sequence[Sequence[Optional[str]]]):
     )
     mega = plan.mega
     if mega is not None:
-        mega = dataclasses.replace(
-            mega, w_cat=(None, None), gain=(None, None), off=(None, None)
+        # every data leaf gets a replicated spec - including the float-glue
+        # extras (deq/bias/enc/ln), which are present exactly when the pack
+        # carries mixed-domain hand-offs
+        repl = {
+            f: (None,) * getattr(mega, f).ndim
+            for f in ("w_cat", "gain", "off", "deq", "bias", "enc", "ln")
+            if getattr(mega, f) is not None
+        }
+        mega = dataclasses.replace(mega, **repl)
+    block = plan.block
+    if block is not None:
+        block = dataclasses.replace(
+            block,
+            ln1=(None,) * block.ln1.ndim,
+            ln2=(None,) * block.ln2.ndim,
         )
-    return dataclasses.replace(plan, layers=layers, mega=mega)
+    return dataclasses.replace(plan, layers=layers, mega=mega, block=block)
 
 
 def group_plan_specs(gp, parent_spec):

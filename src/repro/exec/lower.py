@@ -620,19 +620,6 @@ def lower_block(
     return dataclasses.replace(plan, mega=pack_megakernel(plan))
 
 
-def _plan_domains(plan: AnalogPlan):
-    """Walk the hand-off domains of a lowered chain: ``domains[i]`` is the
-    domain layer i CONSUMES ("codes" | "float"), derived from the plan's
-    input domain and each previous layer's epilogue (relu_shift emits
-    codes; "none" dequantizes to float)."""
-    domains = []
-    d = "codes" if plan.input_domain == INPUT_CODES else "float"
-    for lp in plan.layers:
-        domains.append(d)
-        d = "codes" if lp.epilogue == EPILOGUE_RELU_SHIFT else "float"
-    return domains
-
-
 def megakernel_ineligible_reason(plan: AnalogPlan) -> Optional[str]:
     """Structural megakernel eligibility of a lowered plan; returns None
     when eligible, else a reason naming the first offending layer and its
@@ -646,60 +633,16 @@ def megakernel_ineligible_reason(plan: AnalogPlan) -> Optional[str]:
     as every float-consuming layer has a static input encoding to bake
     (``act_calib == "static"`` and a none/split signed mode).  Block
     plans (:func:`lower_block`) are validated at lower time and always
-    eligible."""
-    layers = plan.layers
-    if plan.block is not None:
-        return None
-    if len(layers) < 2:
-        return "megakernel needs a stack of >= 2 layers"
-    domains = _plan_domains(plan)
-    last = len(layers) - 1
-    for i, lp in enumerate(layers):
-        where = (
-            f"layer {i} (consumes {domains[i]!r}, epilogue {lp.epilogue!r})"
-        )
-        if getattr(lp.w_eff, "ndim", 2) != 2:
-            return f"{where}: scan-stacked (vmapped) plans are not packable"
-        if lp.chunk_rows != layers[0].chunk_rows:
-            return (
-                f"{where}: chunk geometry {lp.chunk_rows} disagrees with "
-                f"layer 0 ({layers[0].chunk_rows})"
-            )
-        if domains[i] == "float":
-            # in-kernel re-encoding needs a compile-time activation LSB:
-            # dynamic calibration derives the scale from the live
-            # activations, which do not exist at pack time
-            if plan.cfg.act_calib != "static":
-                return (
-                    f"{where}: float activations under act_calib="
-                    f"{plan.cfg.act_calib!r} cannot be encoded in-kernel; "
-                    "the baked static LSB needs act_calib='static'"
-                )
-            if lp.signed_input not in ("none", "split"):
-                return (
-                    f"{where}: signed_input {lp.signed_input!r} is not "
-                    "packable (the offset encoding's column-sum "
-                    "correction stays per-layer); use 'none' or 'split'"
-                )
-        if i < last:
-            nxt = layers[i + 1]
-            if lp.flatten_out:
-                if nxt.k % lp.n:
-                    return (
-                        f"{where}: flatten hand-off width n={lp.n} does "
-                        f"not divide layer {i + 1} width k={nxt.k}"
-                    )
-            elif nxt.k != lp.n:
-                return (
-                    f"{where}: hand-off width n={lp.n} does not feed "
-                    f"layer {i + 1} width k={nxt.k}"
-                )
-        elif lp.epilogue != EPILOGUE_NONE:
-            return (
-                f"{where}: the last layer must dequantize "
-                "(epilogue 'none')"
-            )
-    return None
+    eligible.
+
+    Since ISSUE 7 the eligibility walk itself lives in the verifier's
+    domain-transition table
+    (:func:`repro.verify.domains.chain_ineligible_reason` - imported at
+    call time: ``repro.verify`` sits above this module); this name stays
+    the executor-side entry point."""
+    from repro.verify.domains import chain_ineligible_reason
+
+    return chain_ineligible_reason(plan)
 
 
 def pack_megakernel(plan: AnalogPlan) -> Optional[MegakernelPack]:
@@ -723,6 +666,7 @@ def pack_megakernel(plan: AnalogPlan) -> Optional[MegakernelPack]:
     attention+MLP hand-off tags and the RMSNorm scale rows.
     """
     from repro.kernels.analog_plan import MegaLayerMeta
+    from repro.verify import domains as dom
 
     if plan.block is None and megakernel_ineligible_reason(plan) is not None:
         return None
@@ -734,17 +678,16 @@ def pack_megakernel(plan: AnalogPlan) -> Optional[MegakernelPack]:
         bg = plan.block
         block_meta = bg.meta
         handoffs = ("attn", "res_ln", "swiglu", "res_out")
-        domains = ["float"] * len(layers)
+        domains = [dom.DOMAIN_FLOAT] * len(layers)
         factors = [1] * len(layers)
         # every layer of a block sees seq rows per batch element (the
         # whole prefill sequence streams through one grid step so the
         # in-kernel attention sees its full causal context)
         m_mults = [bg.seq] * len(layers)
     else:
-        domains = _plan_domains(plan)
+        domains = dom.consumed_domains(plan)
         handoffs = tuple(
-            ("codes" if lp.epilogue == EPILOGUE_RELU_SHIFT else "relu")
-            if i < last else "raw"
+            dom.handoff_tag(lp.epilogue, i == last)
             for i, lp in enumerate(layers)
         )
         # flatten factor INTO the next layer (the im2col position merge)
@@ -760,8 +703,7 @@ def pack_megakernel(plan: AnalogPlan) -> Optional[MegakernelPack]:
             m_mults[i] = m_mults[i + 1] * factors[i]
 
     encodes = [
-        "codes" if d == "codes"
-        else ("split" if lp.signed_input == "split" else "unsigned")
+        dom.encode_tag(d, lp.signed_input)
         for d, lp in zip(domains, layers)
     ]
 

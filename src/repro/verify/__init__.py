@@ -1,0 +1,52 @@
+"""``repro.verify``: static analysis for the lower-once executor.
+
+- :mod:`repro.verify.domains` - THE domain-transition table (consumed by
+  ``exec.lower`` packing/eligibility and by the rules here);
+- :mod:`repro.verify.invariants` - the plan/spec rule registry
+  (structured :class:`Diagnostic` records, ``verify_plan`` /
+  ``verify_spec`` / ``verify_model`` / ``verify_swap``);
+- :mod:`repro.verify.retrace` - compile-cache / captured-constant
+  detection for serve paths;
+- :mod:`repro.verify.lint` - the custom AST lint;
+- :mod:`repro.verify.sweep` - the repo-wide sweep behind
+  ``python -m repro.verify`` (imported lazily: it pulls in models).
+
+``exec.lower`` imports :mod:`repro.verify.domains` from inside its
+functions (this package intentionally depends on ``repro.exec.plan``
+only at import time, never on ``repro.exec.lower``).
+"""
+from repro.verify import domains  # noqa: F401
+from repro.verify.invariants import (  # noqa: F401
+    RULES,
+    Diagnostic,
+    Rule,
+    VerifyError,
+    check,
+    verify_model,
+    verify_plan,
+    verify_spec,
+    verify_swap,
+)
+from repro.verify.lint import DEPRECATED_SHIMS, LintFinding, run_lint  # noqa: F401
+from repro.verify.retrace import (  # noqa: F401
+    assert_no_retrace,
+    captured_constants,
+)
+
+__all__ = [
+    "domains",
+    "Diagnostic",
+    "Rule",
+    "RULES",
+    "VerifyError",
+    "check",
+    "verify_plan",
+    "verify_spec",
+    "verify_model",
+    "verify_swap",
+    "assert_no_retrace",
+    "captured_constants",
+    "LintFinding",
+    "DEPRECATED_SHIMS",
+    "run_lint",
+]

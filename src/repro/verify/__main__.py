@@ -1,0 +1,48 @@
+"""``python -m repro.verify``: the repo's static verification gate.
+
+Runs the AST lint over ``src/`` / ``benchmarks/`` / ``examples/`` and
+the invariant sweep (every ModuleSpec + the representative compiled
+plans), printing each finding as ``file:line: [rule] message`` /
+``[rule] path: message`` and exiting non-zero if anything fired.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.verify",
+        description="static plan/spec verifier + AST lint",
+    )
+    ap.add_argument("--root", default=".", help="repo root to lint")
+    ap.add_argument("--lint-only", action="store_true",
+                    help="skip the (slower) invariant sweep")
+    ap.add_argument("--sweep-only", action="store_true",
+                    help="skip the AST lint")
+    args = ap.parse_args(argv)
+
+    failed = False
+    if not args.sweep_only:
+        from repro.verify.lint import run_lint
+
+        findings = run_lint(args.root)
+        for f in findings:
+            print(f)
+        print(f"lint: {len(findings)} finding(s)")
+        failed |= bool(findings)
+    if not args.lint_only:
+        from repro.verify.sweep import sweep
+
+        diags = sweep(log=lambda m: print(f"  {m}"))
+        for d in diags:
+            print(d)
+        print(f"invariant sweep: {len(diags)} diagnostic(s)")
+        failed |= bool(diags)
+    print("verify: FAIL" if failed else "verify: OK")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,252 @@
+"""Custom AST lint: keep the lower-once / HIL contract honest at the
+SOURCE level.
+
+The plan rules in :mod:`repro.verify.invariants` check artifacts after
+lowering; this module checks the code that produces them.  Four rules:
+
+``fpn-access``
+    ``params["fpn"]`` / ``params.get("fpn")`` may be READ only by
+    ``repro/exec/lower.py`` and ``repro/calib/`` - fixed-pattern noise
+    is measured hardware state that exactly one consumer folds into the
+    baked tables; model/kernel code reading it would fork the
+    calibration story.  (Writes are fine: init and measurement routines
+    store it.)
+
+``deprecated-shim``
+    The pre-API entry points (``analog_linear_apply``, ``linear_lower``,
+    ``ecg_lower``, ``prelower_tree``) warn and delegate; non-test code
+    must call the front door instead.
+
+``numpy-in-kernel``
+    Pallas kernel bodies (any function with a ``*_ref`` argument) must
+    not call host ``numpy`` - a ``np.`` op inside a traced body either
+    crashes on tracers or silently constant-folds per-compile.
+
+``frozen-plan-dataclass``
+    Every class passed to ``jax.tree_util.register_dataclass`` must be
+    ``@dataclasses.dataclass(frozen=True)`` - plan pytrees are hashed
+    into jit caches via their static metadata; mutation after
+    registration corrupts cached executables.
+
+Suppress a finding with a trailing ``# verify: allow-<rule>`` comment on
+the offending line.  Tests are exempt (they exercise the forbidden
+paths on purpose).  Run over the repo with ``python -m repro.verify``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Dict, Iterable, List, Sequence, Set
+
+DEPRECATED_SHIMS: Dict[str, str] = {
+    "analog_linear_apply": "repro.api.apply_linear",
+    "linear_lower": "api.compile (or exec.lower.lower_layer)",
+    "ecg_lower": "api.compile(ecg_module_spec(...), params, acfg)",
+    "prelower_tree": "api.compile",
+}
+
+# files allowed to mention the shims (their own definitions + re-exports)
+_SHIM_HOMES = (
+    "repro/core/analog.py",
+    "repro/models/layers.py",
+    "repro/models/ecg.py",
+    "repro/exec/lower.py",
+    "__init__.py",
+)
+_FPN_READERS = ("repro/exec/lower.py",)
+_FPN_READER_DIRS = ("repro/calib/",)
+DEFAULT_ROOTS = ("src", "benchmarks", "examples")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    """One lint hit: rule id, file, 1-based line, human message."""
+
+    rule: str
+    file: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.file}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _terminal_name(func: ast.AST) -> str:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return ""
+
+
+def _const_str(node: ast.AST):
+    return node.value if isinstance(node, ast.Constant) else None
+
+
+class _FileLint(ast.NodeVisitor):
+    def __init__(self, relpath: str, source: str):
+        self.relpath = relpath
+        self.lines = source.splitlines()
+        self.findings: List[LintFinding] = []
+        self.np_aliases: Set[str] = set()
+        self.registered: List[ast.Call] = []
+        self.classes: Dict[str, ast.ClassDef] = {}
+        self._ref_depth = 0
+        self.fpn_reader = self.relpath.endswith(_FPN_READERS) or any(
+            d in self.relpath for d in _FPN_READER_DIRS
+        )
+        self.shim_home = self.relpath.endswith(_SHIM_HOMES)
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        src = self.lines[line - 1] if line - 1 < len(self.lines) else ""
+        if f"verify: allow-{rule}" in src:
+            return
+        self.findings.append(LintFinding(rule, self.relpath, line, message))
+
+    # ---- numpy aliases --------------------------------------------------
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            if a.name == "numpy":
+                self.np_aliases.add(a.asname or "numpy")
+        self.generic_visit(node)
+
+    # ---- fpn-access -----------------------------------------------------
+    def visit_Subscript(self, node: ast.Subscript) -> None:
+        if (
+            _const_str(node.slice) == "fpn"
+            and isinstance(node.ctx, ast.Load)
+            and not self.fpn_reader
+        ):
+            self._emit(
+                "fpn-access", node,
+                'params["fpn"] read outside exec.lower/calib: '
+                "fixed-pattern noise is folded into the baked tables by "
+                "exactly one consumer",
+            )
+        self.generic_visit(node)
+
+    # ---- calls: fpn .get, deprecated shims ------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _terminal_name(node.func)
+        if (
+            name == "get"
+            and node.args
+            and _const_str(node.args[0]) == "fpn"
+            and not self.fpn_reader
+        ):
+            self._emit(
+                "fpn-access", node,
+                'params.get("fpn") outside exec.lower/calib',
+            )
+        if name in DEPRECATED_SHIMS and not self.shim_home:
+            self._emit(
+                "deprecated-shim", node,
+                f"call to deprecated shim {name}(); use "
+                f"{DEPRECATED_SHIMS[name]}",
+            )
+        if name == "register_dataclass":
+            self.registered.append(node)
+        if (
+            self._ref_depth
+            and isinstance(node.func, ast.Attribute)
+            and isinstance(node.func.value, ast.Name)
+            and node.func.value.id in self.np_aliases
+        ):
+            self._emit(
+                "numpy-in-kernel", node,
+                f"host numpy call {node.func.value.id}."
+                f"{node.func.attr}() inside a kernel body (traced "
+                "*_ref function); use jnp / lax",
+            )
+        self.generic_visit(node)
+
+    # ---- kernel bodies --------------------------------------------------
+    def _visit_fn(self, node) -> None:
+        args = node.args
+        names = [
+            a.arg
+            for a in (
+                list(args.posonlyargs) + list(args.args)
+                + list(args.kwonlyargs)
+            )
+        ]
+        is_kernel = any(n.endswith("_ref") for n in names)
+        if is_kernel:
+            self._ref_depth += 1
+        self.generic_visit(node)
+        if is_kernel:
+            self._ref_depth -= 1
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    # ---- frozen-plan-dataclass ------------------------------------------
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.classes[node.name] = node
+        self.generic_visit(node)
+
+    def finish(self) -> List[LintFinding]:
+        for call in self.registered:
+            if not call.args or not isinstance(call.args[0], ast.Name):
+                continue
+            cls = self.classes.get(call.args[0].id)
+            if cls is None:       # registering an imported class
+                continue
+            if not self._is_frozen(cls):
+                self._emit(
+                    "frozen-plan-dataclass", cls,
+                    f"class {cls.name} is registered as a pytree "
+                    "dataclass but is not @dataclass(frozen=True); "
+                    "static metadata is hashed into jit caches and must "
+                    "be immutable",
+                )
+        return self.findings
+
+    @staticmethod
+    def _is_frozen(cls: ast.ClassDef) -> bool:
+        for dec in cls.decorator_list:
+            if isinstance(dec, ast.Call) and _terminal_name(
+                dec.func
+            ) == "dataclass":
+                for kw in dec.keywords:
+                    if kw.arg == "frozen" and _const_str(kw.value) is True:
+                        return True
+        return False
+
+
+def lint_source(source: str, relpath: str) -> List[LintFinding]:
+    """Lint one file's source text (exposed for tests)."""
+    try:
+        tree = ast.parse(source, filename=relpath)
+    except SyntaxError as e:
+        return [LintFinding("parse", relpath, e.lineno or 1, str(e.msg))]
+    v = _FileLint(relpath, source)
+    v.visit(tree)
+    return v.finish()
+
+
+def _iter_files(root: pathlib.Path,
+                roots: Sequence[str]) -> Iterable[pathlib.Path]:
+    for r in roots:
+        base = root / r
+        if not base.exists():
+            continue
+        for p in sorted(base.rglob("*.py")):
+            rel = p.relative_to(root).as_posix()
+            if "/tests/" in f"/{rel}" or p.name.startswith("test_"):
+                continue
+            yield p
+
+
+def run_lint(root=".", roots: Sequence[str] = DEFAULT_ROOTS
+             ) -> List[LintFinding]:
+    """Lint every non-test ``.py`` file under ``roots`` (relative to the
+    repo ``root``) and return all findings, stably ordered."""
+    root = pathlib.Path(root)
+    findings: List[LintFinding] = []
+    for p in _iter_files(root, roots):
+        rel = p.relative_to(root).as_posix()
+        findings.extend(lint_source(p.read_text(), rel))
+    return findings

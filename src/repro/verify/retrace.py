@@ -1,0 +1,116 @@
+"""Compile-cache / tracer-leak detection: prove a serve path is
+compile-once.
+
+The executor's contract is that ``lower()`` happens once and every
+subsequent call is a cached replay - no re-lowering (the
+``exec.lower.LOWERINGS`` counter generalized here), no jit-cache growth
+(a new executable per call means a static argument is not actually
+static), and no oversized constants silently closure-captured into a
+trace (a baked plan passed as a Python global instead of an argument
+turns the whole weight table into an XLA constant).
+
+:func:`assert_no_retrace` wraps the warm-then-replay discipline the
+tests hand-roll with ``lowering_count()``; :func:`captured_constants`
+inspects a function's jaxpr for big baked-in arrays.  Both return the
+same structured :class:`~repro.verify.invariants.Diagnostic` records as
+the plan rules, so ``python -m repro.verify`` and CI can report them
+uniformly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.verify.invariants import Diagnostic, check
+
+
+def _cache_size(fn) -> Optional[int]:
+    """Size of a ``jax.jit`` wrapper's executable cache, when the wrapper
+    exposes one (plain Python callables return None and are only checked
+    for lowering work)."""
+    getter = getattr(fn, "_cache_size", None)
+    if getter is None:
+        return None
+    try:
+        return int(getter())
+    except Exception:       # noqa: BLE001 - private API; absence is fine
+        return None
+
+
+def assert_no_retrace(fn, *args, replays: int = 3, label: str = "fn",
+                      strict: bool = False, **kwargs
+                      ) -> Tuple[Diagnostic, ...]:
+    """Call ``fn(*args, **kwargs)`` once to warm every cache, then
+    ``replays`` more times asserting ZERO lowering work and ZERO
+    jit-cache growth across the replays.  Returns diagnostics (empty =
+    the path is compile-once); ``strict=True`` raises
+    :class:`~repro.verify.invariants.VerifyError` instead."""
+    from repro.exec.lower import lowering_count
+
+    out = []
+    fn(*args, **kwargs)                               # warm
+    base_lower = lowering_count()
+    base_cache = _cache_size(fn)
+    for _ in range(replays):
+        fn(*args, **kwargs)
+    d_lower = lowering_count() - base_lower
+    if d_lower:
+        out.append(Diagnostic(
+            "retrace", label,
+            f"{d_lower} re-lowering(s) across {replays} warm replays "
+            "(the baked plan is not being replayed)",
+            "bake the plan once (api.compile / lower_stack) and pass it "
+            "through the call, or fix the static-attr mismatch that "
+            "forces the per-call fallback",
+        ))
+    if base_cache is not None:
+        d_cache = (_cache_size(fn) or 0) - base_cache
+        if d_cache:
+            out.append(Diagnostic(
+                "retrace", label,
+                f"jit cache grew by {d_cache} executable(s) across "
+                f"{replays} warm replays",
+                "a traced argument changes structure/static value per "
+                "call; pin it (static_argnums, frozen metadata) or hash "
+                "it out of the trace",
+            ))
+    if strict:
+        check(out)
+    return tuple(out)
+
+
+def captured_constants(fn, *args, min_bytes: int = 1 << 16,
+                       label: str = "fn", **kwargs
+                       ) -> Tuple[Diagnostic, ...]:
+    """Flag large arrays baked into ``fn``'s jaxpr as CONSTANTS (closure
+    captures) rather than passed as arguments.  Constants are re-staged
+    into every executable that inlines the trace - a megakernel weight
+    table captured this way defeats donation, sharding, and hot-swap.
+    Walks nested closed jaxprs (pjit/scan bodies) too."""
+    jaxpr = jax.make_jaxpr(fn, **kwargs)(*args)
+    seen = set()
+    out = []
+
+    def scan(closed, where):
+        consts = list(getattr(closed, "consts", ()))
+        for i, c in enumerate(consts):
+            nbytes = getattr(c, "nbytes", 0)
+            if id(c) in seen or nbytes < min_bytes:
+                continue
+            seen.add(id(c))
+            out.append(Diagnostic(
+                "captured-constant", f"{where}.consts[{i}]",
+                f"{getattr(c, 'shape', '?')} {getattr(c, 'dtype', '?')} "
+                f"array ({nbytes} bytes) is baked into the trace as a "
+                "constant",
+                "pass the array (or the plan carrying it) as a function "
+                "argument so it stays a runtime input",
+            ))
+        for eq in closed.jaxpr.eqns:
+            for v in eq.params.values():
+                if isinstance(v, jax.extend.core.ClosedJaxpr):
+                    scan(v, f"{where}.{eq.primitive.name}")
+
+    scan(jaxpr, label)
+    return tuple(out)

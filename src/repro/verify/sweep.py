@@ -1,0 +1,119 @@
+"""Repo-wide invariant sweep: verify every ModuleSpec in ``models/``,
+every smoke config in ``configs/``, and the representative compiled
+plans (ecg code-domain chain, rwkv batch_concat, moe expert_stack, the
+fused attention+MLP block).
+
+This is what ``python -m repro.verify`` and the CI ``verify`` job run
+(and what ``benchmarks/run.py --smoke`` gates timing on): a structural
+regression anywhere in the lower/pack/spec pipeline surfaces here as a
+named rule + pytree path, before any benchmark or accuracy number moves.
+
+Heavier than the other verify modules (imports models and compiles
+plans), so it is NOT imported by ``repro.verify.__init__`` - reach it as
+``repro.verify.sweep``.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+
+from repro.verify.invariants import Diagnostic, verify_model, verify_spec
+
+
+def _silent(msg: str) -> None:
+    pass
+
+
+def sweep_specs(log: Callable[[str], None] = _silent
+                ) -> Tuple[Diagnostic, ...]:
+    """Spec-level rules over all registered arch configs (via
+    ``lm_module_spec`` on shape-only params) plus the ecg module specs."""
+    from repro import configs
+    from repro.models import ecg as ECG
+    from repro.models import transformer as T
+
+    out: List[Diagnostic] = []
+    for name in configs.ARCH_NAMES:
+        cfg = configs.get_smoke(name)
+        params = jax.eval_shape(
+            lambda k, c=cfg: T.lm_init(k, c), jax.random.PRNGKey(0)
+        )
+        diags = verify_spec(T.lm_module_spec(cfg, params))
+        log(f"spec {name}: {len(diags)} diagnostic(s)")
+        out.extend(diags)
+    for epi in ("none", "relu_shift"):
+        diags = verify_spec(
+            ECG.ecg_module_spec(ECG.ECGConfig(), epilogue=epi)
+        )
+        log(f"spec ecg/{epi}: {len(diags)} diagnostic(s)")
+        out.extend(diags)
+    return tuple(out)
+
+
+def sweep_plans(log: Callable[[str], None] = _silent
+                ) -> Tuple[Diagnostic, ...]:
+    """Full-tier plan rules over compiled models covering every plan
+    shape the executor produces: the ecg code-domain megakernel stack
+    (both epilogues), an rwkv batch_concat group, a moe expert_stack
+    group, and the fused attention+MLP block."""
+    from repro import api
+    from repro.configs.base import ArchConfig
+    from repro.core.analog import AnalogConfig
+    from repro.core.noise import NOISELESS
+    from repro.models import ecg as ECG
+    from repro.models import moe as M
+    from repro.models import rwkv as R
+    from repro.models import transformer as T
+
+    key = jax.random.PRNGKey(0)
+    acfg = AnalogConfig(noise=NOISELESS)
+    out: List[Diagnostic] = []
+
+    def run(label, model):
+        diags = verify_model(model)
+        log(f"plan {label}: {len(diags)} diagnostic(s)")
+        out.extend(diags)
+
+    ecg_cfg = ECG.ECGConfig()
+    ecg_params = ECG.ecg_init(key, ecg_cfg)
+    for epi in ("none", "relu_shift"):
+        run(f"ecg/{epi}", api.compile(
+            ECG.ecg_module_spec(ecg_cfg, epilogue=epi), ecg_params, acfg
+        ))
+
+    d, heads = 64, 4
+    run("rwkv/batch_concat", api.compile(
+        R.rwkv_module_spec(d, heads), R.rwkv_init(key, d, heads), acfg
+    ))
+
+    # scan-stacked groups: the LM rwkv arch lowers the batch_concat
+    # group under vmap, prepending a scan-stack axis to every fused leaf
+    rw_cfg = ArchConfig("t-rwkv", "ssm", n_layers=2, d_model=64,
+                        n_heads=4, n_kv_heads=4, d_ff=128,
+                        vocab_size=256, block="rwkv", remat=False)
+    rw_params = T.lm_init(key, rw_cfg)
+    run("rwkv/scan_stacked", api.compile(
+        T.lm_module_spec(rw_cfg, rw_params), rw_params, acfg
+    ))
+
+    run("moe/expert_stack", api.compile(
+        M.moe_module_spec(64, 32, 4, top_k=2),
+        M.moe_init(key, 64, 32, 4), acfg
+    ))
+
+    arch = ArchConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=2, n_kv_heads=2, d_ff=96, vocab_size=64,
+                      remat=False)
+    run("block/attn_mlp", api.compile_block(
+        T._layer_init(key, "attn_mlp", arch),
+        AnalogConfig(act_calib="static", noise=NOISELESS),
+        n_heads=arch.n_heads, n_kv_heads=arch.n_kv_heads,
+        head_dim=arch.hd, seq=8, rope_theta=arch.rope_theta,
+    ))
+    return tuple(out)
+
+
+def sweep(log: Callable[[str], None] = _silent) -> Tuple[Diagnostic, ...]:
+    """The full invariant sweep (specs + compiled plans)."""
+    return sweep_specs(log) + sweep_plans(log)
