@@ -490,10 +490,17 @@ def calibrated_vs_ideal_replay(iters: int = 10) -> dict:
     The ECG code-domain chain lowered twice from the SAME weights: once
     from the oracle fixed pattern (``params["fpn"]``, simulation ground
     truth) and once from a ``repro.calib`` CalibrationSnapshot measured
-    blind on the layers' VirtualChips.  Both plans have identical static
-    metadata and leaf shapes, so they replay through ONE jitted
-    executable - the CI gate asserts calibration does not slow the replay
-    hot path (it must not: the bake source changes leaf VALUES only).
+    blind on the layers' VirtualChips.
+
+    Since ISSUE 8 the two bakes are structurally DIFFERENT by design:
+    the packed :class:`~repro.exec.plan.WeightStore` keeps the oracle's
+    per-cell ``gain_map`` ([K_pad, N]) and a measurement's per-chunk
+    ``chunk_gain`` ([C, N]) as distinct leaves instead of folding both
+    into one fp32 ``w_eff``, so ideal-vs-calibrated is a timing
+    comparison only.  The executable-identity pin production actually
+    relies on - recalibrating does not recompile - is asserted between
+    TWO measured bakes (``same_executable``): snapshots differ in leaf
+    values only, so both must hit one jitted executable.
     """
     import jax
     import jax.numpy as jnp
@@ -548,12 +555,190 @@ def calibrated_vs_ideal_replay(iters: int = 10) -> dict:
     for name, b in best.items():
         out[f"{name}_us"] = b * 1e6
     out["speedup"] = out["ideal_us"] / out["calibrated_us"]
-    # the deterministic form of ">= 1.0x": both bakes hit ONE compiled
-    # executable (identical treedef + static metadata + leaf shapes), so
-    # the replay hot path is literally the same machine code - a second
-    # cache entry would mean calibration changed the compiled program
-    out["same_executable"] = f._cache_size() == 1
+    # the deterministic no-recompile pin: a SECOND measured snapshot
+    # (same table shapes, different values - what a recalibration or a
+    # drift re-measure produces) must replay through the SAME compiled
+    # executable as the first.  A second cache entry would mean
+    # calibration state leaked into the compiled program.
+    snap2 = jax.tree.map(lambda t: t + 0.25, snap)
+    recal = lower_stack(
+        lp, acfg,
+        calibs=[snap2.layer(n) for n in ("conv", "fc1", "fc2")], **kw
+    )
+    g = jax.jit(lambda plan, c: run_plan(plan, c))
+    g(plans["calibrated"], cols).block_until_ready()
+    g(recal, cols).block_until_ready()
+    out["same_executable"] = g._cache_size() == 1
     return out
+
+
+def _packed_plan_bytes(plan) -> int:
+    """Resident bytes of a packed plan: every array leaf counted ONCE
+    (the megakernel pack shares its stores' arrays with the layers by
+    object identity, so dedupe by id)."""
+    import jax
+
+    seen, total = set(), 0
+    for leaf in jax.tree_util.tree_leaves(plan):
+        if id(leaf) in seen:
+            continue
+        seen.add(id(leaf))
+        total += leaf.nbytes
+    return total
+
+
+def _fp32_bake_bytes(plan) -> int:
+    """Structural bytes of the same plan under the pre-ISSUE-8
+    representation: each layer carried a materialized fp32 ``w_eff``
+    [K_pad, N] (gain components folded in - no code/scale/gain split)
+    and the megakernel pack carried its own fp32 ``w_cat``
+    [sum K_pad, n_max] copy.  Non-weight leaves (offsets, scales,
+    biases, glue) are identical in both representations and count
+    as-is."""
+    import jax
+
+    total = 0
+    stores = [lp.store for lp in plan.layers]
+    for s in stores:
+        total += s.codes.size * 4               # fp32 w_eff
+        total += s.w_scale.nbytes + np.asarray(s.gain).nbytes
+    store_leaf_ids = {
+        id(l) for s in stores for l in jax.tree_util.tree_leaves(s)
+    }
+    if plan.mega is not None:
+        store_leaf_ids |= {
+            id(l) for s in plan.mega.stores
+            for l in jax.tree_util.tree_leaves(s)
+        }
+        total += sum(
+            s.codes.shape[-2] for s in plan.mega.stores
+        ) * plan.mega.n_max * 4                 # fp32 w_cat copy
+    seen = set()
+    for leaf in jax.tree_util.tree_leaves(plan):
+        if id(leaf) in seen or id(leaf) in store_leaf_ids:
+            continue
+        seen.add(id(leaf))
+        total += leaf.nbytes
+    return total
+
+
+def plan_bytes_footprint() -> dict:
+    """Packed plan bytes vs the fp32 bake (ISSUE 8): the ECG chain and
+    one transformer block, both with their megakernel packing.  The
+    packed representation stores int8 weight codes plus small scale/gain
+    tables and the megakernel pack SHARES the layers' stores instead of
+    materializing a second fp32 ``w_cat`` - CI gates the
+    transformer-block and calibrated-ECG ratios at <= 0.3x of the fp32
+    bake.
+
+    ``ecg_oracle`` is the one packed-layout loss case, reported ungated:
+    the oracle noise model's per-cell fixed-pattern gain has no
+    compressed form (a full [K_pad, N] fp32 ``gain_map`` rides along
+    with the codes), whereas the legacy bake folded it into ``w_eff``
+    for free.  Real hardware cannot bake the oracle map at all - it
+    bakes MEASURED per-(chunk, column) gain tables
+    (``ecg_calibrated``), where the packing wins like everywhere
+    else."""
+    import jax
+
+    from repro import api, calib
+    from repro.core.analog import AnalogConfig
+    from repro.models import ecg as ECG
+    from repro.models import transformer as T
+    from repro.configs.base import ArchConfig
+    from repro.exec.lower import lower_block
+
+    out = {}
+    ecg_cfg = ECG.ECGConfig()
+    ecg_params = ECG.ecg_init(jax.random.PRNGKey(0), ecg_cfg)
+    ecg_spec = ECG.ecg_module_spec(ecg_cfg)
+    acfg = AnalogConfig()
+    ecg_plan = api.compile(ecg_spec, ecg_params, acfg).lower()
+    x = jax.numpy.round(
+        jax.random.uniform(jax.random.PRNGKey(1), (32, 2, 126)) * 31
+    )
+    snap = calib.calibrate_model(
+        ecg_spec, ecg_params, jax.random.PRNGKey(2), acfg=acfg,
+        sample=ECG._im2col(x, ecg_cfg.conv_taps, ecg_cfg.conv_stride),
+    )
+    ecg_cal_plan = api.compile(
+        ecg_spec, ecg_params, acfg, calibration=snap
+    ).lower()
+    cfg = ArchConfig(name="bench", family="dense", n_layers=1, d_model=256,
+                     n_heads=4, n_kv_heads=4, d_ff=512, vocab_size=32,
+                     remat=False)
+    block_plan = lower_block(
+        T._layer_init(jax.random.PRNGKey(0), "attn_mlp", cfg),
+        AnalogConfig(act_calib="static"),
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+        seq=32, rope_theta=cfg.rope_theta,
+    )
+    for name, plan in (("ecg_oracle", ecg_plan),
+                       ("ecg_calibrated", ecg_cal_plan),
+                       ("transformer_block", block_plan)):
+        packed = _packed_plan_bytes(plan)
+        fp32 = _fp32_bake_bytes(plan)
+        out[name] = {
+            "packed_bytes": packed,
+            "fp32_bake_bytes": fp32,
+            "ratio": packed / fp32,
+            "reduction": fp32 / packed,
+        }
+    return out
+
+
+def serve_cold_start(iters: int = 3) -> dict:
+    """Serve cold-start: lowering the LM from raw params vs loading the
+    packed plan cache (ISSUE 8).  Both produce the identical pre-lowered
+    tree the jitted serve steps replay; the cache load performs ZERO
+    lowering work (pinned by tests via ``exec.lower.lowering_count``).
+    CI gates ``load_us < lower_us``."""
+    import os
+    import tempfile
+
+    import jax
+
+    from repro import api
+    from repro.configs.base import ArchConfig, RunConfig
+    from repro.core.analog import AnalogConfig
+    from repro.exec.store import load_plan, save_plan
+    from repro.models import transformer as T
+
+    cfg = ArchConfig("bench-lm", "dense", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256)
+    run = RunConfig(analog=AnalogConfig(mode="analog_fast"))
+    params = T.lm_init(jax.random.PRNGKey(0), cfg)
+    spec = T.lm_module_spec(cfg, params)
+
+    def lower_once():
+        lowered = api.compile(spec, params, run).lower()
+        jax.block_until_ready(jax.tree_util.tree_leaves(lowered))
+        return lowered
+
+    lower_us = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        lower_once()
+        lower_us = min(lower_us, (time.perf_counter() - t0) * 1e6)
+
+    with tempfile.TemporaryDirectory() as td:
+        cache = os.path.join(td, "lm_plan.npz")
+        save_plan(cache, lower_once())
+        load_us = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            loaded = load_plan(cache)
+            jax.block_until_ready(jax.tree_util.tree_leaves(loaded))
+            load_us = min(load_us, (time.perf_counter() - t0) * 1e6)
+        cache_bytes = os.path.getsize(cache)
+
+    return {
+        "shape": f"lm[{cfg.n_layers}x d={cfg.d_model}]",
+        "lower_us": lower_us,
+        "load_us": load_us,
+        "cache_bytes": cache_bytes,
+        "speedup": lower_us / load_us,
+    }
 
 
 def emulation_throughput() -> dict:

@@ -41,6 +41,7 @@ layers without an entry keep the oracle bake.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Iterator, Optional, Sequence, Tuple
 
 import jax
@@ -104,7 +105,9 @@ def _lower_leaf(node: dict, acfg: AnalogConfig, calib=None):
     Measured calibration applies to plain 2-D layers (a scan-stacked
     layer has no single physical device)."""
     if node["w"].ndim == 3:
-        return jax.vmap(lambda p: lower_layer(p, acfg))(node)
+        lp = jax.vmap(lambda p: lower_layer(p, acfg))(node)
+        # the vmap trace leaves concrete fp32 codes; repack outside it
+        return dataclasses.replace(lp, store=lp.store.packed())
     return lower_layer(node, acfg, calib=calib)
 
 
@@ -222,6 +225,9 @@ def _lower_group(
             fused = jax.vmap(
                 lambda *ms: lower_fused(list(ms), acfg)
             )(*members)
+            fused = dataclasses.replace(
+                fused, store=fused.store.packed()
+            )
         else:
             fused = lower_fused(members, acfg, calibs=calibs)
     elif g.kind == GROUP_BATCH_CONCAT:
@@ -653,7 +659,7 @@ def swap_calibration(lowered, snapshot, *, path: str = ""):
                 rec = snapshot.layer(p)
                 out[k] = v if (
                     rec is None or rec.chunk_offset is None
-                    or getattr(v.w_eff, "ndim", 2) != 2
+                    or getattr(v.store.codes, "ndim", 2) != 2
                 ) else layer_with_offsets(v, rec.chunk_offset)
             elif k == _GROUPS:
                 out[k] = {
@@ -672,7 +678,8 @@ def swap_calibration(lowered, snapshot, *, path: str = ""):
                 off = legacy_qkv_offsets(p)
                 v = node[_QKV_PLAN]
                 out[_QKV_PLAN] = v if (
-                    off is None or getattr(v.w_eff, "ndim", 2) != 2
+                    off is None
+                    or getattr(v.store.codes, "ndim", 2) != 2
                 ) else layer_with_offsets(v, off)
         return out
 

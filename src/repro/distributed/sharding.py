@@ -254,13 +254,27 @@ def layer_plan_specs(lp, w_spec: Sequence[Optional[str]]):
             return None
         return prefix + (out_name,) if leaf.ndim > nd else prefix
 
+    s = lp.store
+    store = dataclasses.replace(
+        s,
+        # the packed codes carry the SAME logical axes as the master
+        # weight they quantize; gain tables shard by the axes they index
+        codes=w_spec,
+        w_scale=prefix + (None, out_name),
+        gain=per_col(s.gain),
+        col_gain=None if s.col_gain is None else prefix + (out_name,),
+        row_gain=None if s.row_gain is None else prefix + (None, in_name),
+        chunk_gain=(
+            None if s.chunk_gain is None
+            else prefix + ("chunks", out_name)
+        ),
+        gain_map=None if s.gain_map is None else w_spec,
+    )
     return dataclasses.replace(
         lp,
-        w_eff=w_spec,
-        w_scale=prefix + (None, out_name),
+        store=store,
         a_scale=prefix,
         a_scale_in=None if lp.a_scale_in is None else prefix,
-        gain=per_col(lp.gain),
         chunk_offset=(
             None if lp.chunk_offset is None
             else prefix + ("chunks", out_name)
@@ -289,9 +303,18 @@ def analog_plan_specs(plan, layer_axes: Sequence[Sequence[Optional[str]]]):
         # carries mixed-domain hand-offs
         repl = {
             f: (None,) * getattr(mega, f).ndim
-            for f in ("w_cat", "gain", "off", "deq", "bias", "enc", "ln")
+            for f in ("gain", "off", "deq", "bias", "enc", "ln")
             if getattr(mega, f) is not None
         }
+        repl["stores"] = tuple(
+            dataclasses.replace(s, **{
+                f: (None,) * getattr(s, f).ndim
+                for f in ("codes", "w_scale", "gain", "col_gain",
+                          "row_gain", "chunk_gain", "gain_map")
+                if getattr(s, f) is not None
+            })
+            for s in mega.stores
+        )
         mega = dataclasses.replace(mega, **repl)
     block = plan.block
     if block is not None:

@@ -51,6 +51,7 @@ from repro.exec.plan import (
     GroupPlan,  # noqa: F401  (re-exported beside its lowerings)
     LayerPlan,
     MegakernelPack,
+    WeightStore,
     default_shift,
 )
 
@@ -110,9 +111,16 @@ def lower_layer(
     w_scale = params["w_scale"]
     w_code = quant.quantize_weight(w, w_scale)
     n_chunks = -(-k // cfg.chunk_rows)
+    pad = n_chunks * cfg.chunk_rows - k
     a_scale = jnp.asarray(params["a_scale"], jnp.float32)
     a_scale_in = None
     fpn = params.get("fpn", {})
+    # packed bake (ISSUE 8): the plan stores the 6-bit codes plus the gain
+    # TABLES; the fp32 w_eff product is a derived view (WeightStore.w_eff,
+    # bit-exact vs the legacy baked array - same elementwise multiply
+    # order, pad entries exact 1.0).
+    col_gain = row_gain = chunk_gain = gain_map = None
+    gt = getattr(calib, "gain_table", None) if calib is not None else None
     if calib is not None:
         # measured bake: per-(chunk, column) tables from blind device
         # measurement stand in for the ground-truth fixed pattern.
@@ -120,16 +128,13 @@ def lower_layer(
         # to the oracle params - a scales-only record (e.g. built by
         # share_group_input_scale with explicit scales) must not
         # silently model an ideal chip.
-        gt = getattr(calib, "gain_table", None)
         if gt is not None:
             if gt.shape != (n_chunks, n):
                 raise ValueError(
                     f"gain_table shape {gt.shape} does not match the "
                     f"({n_chunks}, {n}) chunk grid of a {k}x{n} layer"
                 )
-            w_eff = w_code * jnp.repeat(gt, cfg.chunk_rows, axis=0)[:k]
-        else:
-            w_eff = noise_lib.effective_weight(w_code, fpn)
+            chunk_gain = jnp.asarray(gt, jnp.float32)
         chunk_off = getattr(calib, "chunk_offset", None)
         if chunk_off is not None:
             if chunk_off.shape != (n_chunks, n):
@@ -145,21 +150,40 @@ def lower_layer(
         if getattr(calib, "a_scale_in", None) is not None:
             a_scale_in = jnp.asarray(calib.a_scale_in, jnp.float32)
     else:
-        w_eff = noise_lib.effective_weight(w_code, fpn)
         chunk_off = noise_lib.chunk_offsets(fpn, n_chunks, n)
-    pad = n_chunks * cfg.chunk_rows - k
-    if pad:
-        w_eff = jnp.pad(w_eff, ((0, pad), (0, 0)))
+    if gt is None:
+        if "gain" in fpn:
+            gain_map = jnp.asarray(fpn["gain"], jnp.float32)
+            if pad:
+                gain_map = jnp.pad(gain_map, ((0, pad), (0, 0)),
+                                   constant_values=1.0)
+        else:
+            if "col_gain" in fpn:
+                col_gain = jnp.asarray(fpn["col_gain"], jnp.float32)
+            if "row_gain" in fpn:
+                rg = jnp.asarray(fpn["row_gain"], jnp.float32)
+                if pad:
+                    rg = jnp.pad(rg, (0, pad), constant_values=1.0)
+                row_gain = rg[None, :]
+    codes = jnp.pad(w_code, ((0, pad), (0, 0))) if pad else w_code
+    store = WeightStore(
+        codes=codes,
+        w_scale=w_scale,
+        gain=jnp.asarray(params["gain"], jnp.float32),
+        col_gain=col_gain,
+        row_gain=row_gain,
+        chunk_gain=chunk_gain,
+        gain_map=gain_map,
+        chunk_rows=cfg.chunk_rows,
+    ).packed()
     signed = cfg.signed_input if signed_input is None else signed_input
     if shift is None:
         shift = default_shift(n_chunks)
     return LayerPlan(
-        w_eff=w_eff,
-        w_scale=w_scale,
+        store=store,
         a_scale=a_scale,
-        gain=jnp.asarray(params["gain"], jnp.float32),
         chunk_offset=chunk_off,
-        colsum=w_eff.sum(axis=0) if signed == "offset" else None,
+        colsum=store.w_eff.sum(axis=0) if signed == "offset" else None,
         bias=params.get("b"),
         k=k,
         n=n,
@@ -333,29 +357,75 @@ def lower_fused(
         c = plans[0].n_chunks
         chunk_off = cat([
             lp.chunk_offset if lp.chunk_offset is not None
-            else jnp.zeros(lp.w_eff.shape[:-2] + (c, lp.n), jnp.float32)
+            else jnp.zeros(lp.store.codes.shape[:-2] + (c, lp.n),
+                           jnp.float32)
             for lp in plans
         ])
     colsum = None
     if any(lp.colsum is not None for lp in plans):
         colsum = cat([
             lp.colsum if lp.colsum is not None
-            else jnp.zeros(lp.w_eff.shape[:-2] + (lp.n,), jnp.float32)
+            else jnp.zeros(lp.store.codes.shape[:-2] + (lp.n,), jnp.float32)
             for lp in plans
         ])
     bias = None
     if any(lp.bias is not None for lp in plans):
         bias = cat([
             lp.bias if lp.bias is not None
-            else jnp.zeros(lp.w_eff.shape[:-2] + (lp.n,), jnp.float32)
+            else jnp.zeros(lp.store.codes.shape[:-2] + (lp.n,), jnp.float32)
             for lp in plans
         ])
+    # concatenate the member WeightStores column-wise.  Absent gain
+    # components fill with exact 1.0 (x * 1.0 is IEEE-exact, so a member
+    # without e.g. a chunk_gain table dequantizes bit-identically inside
+    # the fused store); per-member row gains cannot fold into one vector,
+    # so they stack per column block ([G, K_pad] + col_blocks).
+    stores = [lp.store for lp in plans]
+    c = plans[0].n_chunks
+    k_pad = stores[0].k_pad
+    col_gain = row_gain = chunk_gain = gain_map = col_blocks = None
+    if any(s.col_gain is not None for s in stores):
+        col_gain = cat([
+            s.col_gain if s.col_gain is not None
+            else jnp.ones((lp.n,), jnp.float32)
+            for s, lp in zip(stores, plans)
+        ])
+    if any(s.chunk_gain is not None for s in stores):
+        chunk_gain = cat([
+            s.chunk_gain if s.chunk_gain is not None
+            else jnp.ones((c, lp.n), jnp.float32)
+            for s, lp in zip(stores, plans)
+        ])
+    if any(s.gain_map is not None for s in stores):
+        gain_map = cat([
+            s.gain_map if s.gain_map is not None
+            else jnp.ones((k_pad, lp.n), jnp.float32)
+            for s, lp in zip(stores, plans)
+        ])
+    if any(s.row_gain is not None for s in stores):
+        row_gain = jnp.stack([
+            s.row_gain[..., 0, :] if s.row_gain is not None
+            else jnp.ones((k_pad,), jnp.float32)
+            for s in stores
+        ], axis=-2)
+        col_blocks = tuple(lp.n for lp in plans)
+    store = WeightStore(
+        codes=cat([s.codes for s in stores]),
+        w_scale=cat([s.w_scale for s in stores]),
+        gain=cat([
+            jnp.broadcast_to(s.gain, s.codes.shape[:-2] + (lp.n,))
+            for s, lp in zip(stores, plans)
+        ]),
+        col_gain=col_gain,
+        row_gain=row_gain,
+        chunk_gain=chunk_gain,
+        gain_map=gain_map,
+        chunk_rows=plans[0].chunk_rows,
+        col_blocks=col_blocks,
+    )
     return LayerPlan(
-        w_eff=cat([lp.w_eff for lp in plans]),
-        w_scale=cat([lp.w_scale for lp in plans]),
+        store=store,
         a_scale=a_scale,
-        gain=cat([jnp.broadcast_to(lp.gain, lp.w_eff.shape[:-2] + (lp.n,))
-                  for lp in plans]),
         chunk_offset=chunk_off,
         colsum=colsum,
         bias=bias,
@@ -377,16 +447,27 @@ def _stack_layer_plans(plans: Sequence[LayerPlan]) -> LayerPlan:
     for members that lack them; ``a_scale_in`` stacks only when every
     member carries it (a partial group calibration must not unlock a
     shared encoding)."""
+    # normalize code dtypes first: eagerly-lowered 2-D members carry int8
+    # codes, vmapped (scan-stacked) members come out of the trace as
+    # concrete fp32 - repack so the member stack does not silently promote
+    plans = [dataclasses.replace(lp, store=lp.store.packed())
+             for lp in plans]
     p0 = plans[0]
-    nd = p0.w_eff.ndim - 2           # scan-stack prefix rank
+    nd = p0.store.codes.ndim - 2     # scan-stack prefix rank
     for lp in plans:
         if (lp.k, lp.n, lp.chunk_rows, lp.signed_input,
-                lp.w_eff.ndim) != (p0.k, p0.n, p0.chunk_rows,
-                                   p0.signed_input, p0.w_eff.ndim):
+                lp.store.codes.ndim) != (p0.k, p0.n, p0.chunk_rows,
+                                         p0.signed_input,
+                                         p0.store.codes.ndim):
             raise ValueError(
                 "batch-concat members must share the weight geometry and "
                 "input encoding: "
                 f"{[(p.k, p.n, p.chunk_rows, p.signed_input) for p in plans]}"
+            )
+        if lp.store.col_blocks != p0.store.col_blocks:
+            raise ValueError(
+                "batch-concat members must share the column-block layout: "
+                f"{[p.store.col_blocks for p in plans]}"
             )
 
     def stk(leaves, fill=None):
@@ -400,12 +481,16 @@ def _stack_layer_plans(plans: Sequence[LayerPlan]) -> LayerPlan:
                          axis=nd)
 
     c = p0.n_chunks
-    pre = p0.w_eff.shape[:-2]
-    return LayerPlan(
-        w_eff=stk([lp.w_eff for lp in plans]),
-        w_scale=stk([jnp.broadcast_to(lp.w_scale, pre + (1, lp.n))
-                     for lp in plans]),
-        a_scale=stk([jnp.broadcast_to(lp.a_scale, pre) for lp in plans]),
+    pre = p0.store.codes.shape[:-2]
+    k_pad = p0.store.k_pad
+    stores = [lp.store for lp in plans]
+    g_rows = next((s.row_gain.shape[-2] for s in stores
+                   if s.row_gain is not None), 1)
+    store = WeightStore(
+        # dtype-preserving: packed int8 members stack to int8
+        codes=jnp.stack([s.codes for s in stores], axis=nd),
+        w_scale=stk([jnp.broadcast_to(s.w_scale, pre + (1, lp.n))
+                     for s, lp in zip(stores, plans)]),
         # per-column broadcast regardless of the members' (scalar) gains:
         # equal values, identical arithmetic, no ndim branching
         gain=stk([
@@ -414,8 +499,30 @@ def _stack_layer_plans(plans: Sequence[LayerPlan]) -> LayerPlan:
                 if jnp.ndim(g) <= len(pre) else jnp.asarray(g, jnp.float32),
                 pre + (p0.n,),
             )
-            for g in (lp.gain for lp in plans)
+            for g in (s.gain for s in stores)
         ]),
+        col_gain=stk(
+            [s.col_gain for s in stores],
+            fill=lambda: jnp.ones(pre + (p0.n,), jnp.float32),
+        ),
+        row_gain=stk(
+            [s.row_gain for s in stores],
+            fill=lambda: jnp.ones(pre + (g_rows, k_pad), jnp.float32),
+        ),
+        chunk_gain=stk(
+            [s.chunk_gain for s in stores],
+            fill=lambda: jnp.ones(pre + (c, p0.n), jnp.float32),
+        ),
+        gain_map=stk(
+            [s.gain_map for s in stores],
+            fill=lambda: jnp.ones(pre + (k_pad, p0.n), jnp.float32),
+        ),
+        chunk_rows=p0.chunk_rows,
+        col_blocks=p0.store.col_blocks,
+    )
+    return LayerPlan(
+        store=store,
+        a_scale=stk([jnp.broadcast_to(lp.a_scale, pre) for lp in plans]),
         chunk_offset=stk(
             [lp.chunk_offset for lp in plans],
             fill=lambda: jnp.zeros(pre + (c, p0.n), jnp.float32),
@@ -519,9 +626,11 @@ def lower_expert_stack(w, cfg: AnalogConfig) -> LayerPlan:
             lambda we: _statistical_gain(we, cfg.chunk_rows)
         )(w),
     }
-    return jax.vmap(
+    lp = jax.vmap(
         lambda p: lower_layer(p, cfg, signed_input="none")
     )(params)
+    # the vmap trace leaves concrete fp32 codes; repack to int8 outside it
+    return dataclasses.replace(lp, store=lp.store.packed())
 
 
 def lower_block(
@@ -710,20 +819,19 @@ def pack_megakernel(plan: AnalogPlan) -> Optional[MegakernelPack]:
     lane = 128
     n_max = max(
         max(lp.n for lp in layers),
-        max(lp.w_eff.shape[0] for lp in layers[1:]),
+        max(lp.k_pad for lp in layers[1:]),
     )
     n_max = -(-n_max // lane) * lane
 
     needs_extras = any(e != "codes" for e in encodes) or any(
         h not in ("codes", "raw") for h in handoffs
     )
-    schedule, w_blocks, gain_rows, off_blocks = [], [], [], []
+    schedule, gain_rows, off_blocks = [], [], []
     deq_rows, bias_rows, enc_rows = [], [], []
     row0 = c0 = 0
     for i, lp in enumerate(layers):
-        k_pad = lp.w_eff.shape[0]
+        k_pad = lp.k_pad
         n_chunks = lp.n_chunks
-        w_blocks.append(jnp.pad(lp.w_eff, ((0, 0), (0, n_max - lp.n))))
         gain_rows.append(jnp.pad(
             jnp.broadcast_to(
                 jnp.asarray(lp.gain, jnp.float32), (lp.n,)
@@ -785,7 +893,10 @@ def pack_megakernel(plan: AnalogPlan) -> Optional[MegakernelPack]:
                 jnp.asarray(bg.ln2, jnp.float32))
             extras["ln"] = ln
     return MegakernelPack(
-        w_cat=jnp.concatenate(w_blocks, axis=0),
+        # the pack shares the layers' WeightStores by reference (same
+        # arrays, no copy); the column-padded fp32 concatenation the
+        # kernel consumes is the derived MegakernelPack.w_cat view
+        stores=tuple(lp.store for lp in layers),
         gain=jnp.stack(gain_rows, axis=0),
         off=jnp.concatenate(off_blocks, axis=0),
         schedule=tuple(schedule),

@@ -5,10 +5,15 @@ analog VMM passes on fixed synapse tiles (Fig. 4, §II-C): weights are
 quantized, calibrated and placed ONCE, then inference replays the schedule.
 This module is the software mirror of that split:
 
-- :class:`LayerPlan` - one analog layer after lowering: the quantized
-  effective weights (``w_eff``, already padded to a whole number of
-  128-row chunks), the dequantization scales, the calibrated gain, the
-  frozen fixed-pattern chunk offsets, and the static execution attributes
+- :class:`WeightStore` - the packed weight state of one lowered layer:
+  6-bit signed weight codes (int8, already padded to a whole number of
+  128-row chunks), per-column weight LSB, the calibrated gain and the
+  fixed-pattern / measured gain tables.  The fp32 effective weights
+  (``w_eff``) are a DERIVED dequantized view, computed in-graph - plan
+  bytes scale with what the chip actually stores (ISSUE 8).
+- :class:`LayerPlan` - one analog layer after lowering: its
+  :class:`WeightStore`, the dequantization scales, the frozen
+  fixed-pattern chunk offsets, and the static execution attributes
   (signed encoding, epilogue, chunk geometry).
 - :class:`AnalogPlan` - an ordered stack of :class:`LayerPlan` that runs
   as one jitted analog program (see :mod:`repro.exec.run`).
@@ -30,6 +35,7 @@ import dataclasses
 from typing import Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.analog import AnalogConfig
 from repro.core.hw import BSS2
@@ -83,13 +89,121 @@ def default_shift(n_chunks: int) -> int:
 
 
 @dataclasses.dataclass(frozen=True)
+class WeightStore:
+    """Packed weight state of one lowered analog layer (frozen pytree):
+    what the chip actually stores - 6-bit signed weight codes plus the
+    calibration tables - with the fp32 effective weights as a DERIVED
+    view (:attr:`w_eff`) instead of a baked array (ISSUE 8).
+
+    Array fields (pytree leaves):
+      codes:      [.., K_pad, N] quantized 6-bit weight codes, rows
+                  zero-padded to a whole number of chunks.  ``int8`` in
+                  a concretely-lowered plan (:meth:`packed`); float32
+                  STE codes while tracing (HIL training re-lowers inside
+                  ``jax.grad`` - an int8 cast would kill the
+                  straight-through gradient to the float masters).
+      w_scale:    [.., 1, N] per-column weight LSB.
+      gain:       scalar (or per-column / per-member) calibrated analog
+                  gain the executor dispatches with (NOT folded into
+                  ``w_eff``).
+      col_gain:   optional [.., N] per-column fixed-pattern gain
+                  (rank-1 noise mode).
+      row_gain:   optional [.., G, K_pad] per-row fixed-pattern gain,
+                  one row-vector per column block (G = 1 for a solo
+                  layer; one per member for a column_concat fusion,
+                  split by ``col_blocks``).  Pad rows hold exact 1.0.
+      chunk_gain: optional [.., C, N] measured per-(chunk, column) gain
+                  table (calibrated bake; Weis et al. 2020).
+      gain_map:   optional [.., K_pad, N] full per-synapse gain map
+                  (``NoiseConfig.mode == "full"``), pad rows exact 1.0.
+
+    Static fields (hashable aux data):
+      chunk_rows: rows per analog chunk (row_gain/chunk_gain layout).
+      col_blocks: per-member output widths of a column_concat fusion
+                  (sums to N), or None for a single block.
+
+    Dequantization contract (:attr:`w_eff`): multiply codes by col_gain,
+    then the per-block row_gain, then the chunk-repeated chunk_gain,
+    then gain_map - ELEMENTWISE in exactly this order, which reproduces
+    ``repro.core.noise.effective_weight`` / the measured-bake product of
+    ``exec.lower`` bit-for-bit (absent components multiply by nothing;
+    present-but-padded entries are exact 1.0, and ``x * 1.0`` is exact
+    in IEEE-754).
+    """
+
+    codes: jax.Array
+    w_scale: jax.Array
+    gain: jax.Array
+    col_gain: Optional[jax.Array] = None
+    row_gain: Optional[jax.Array] = None
+    chunk_gain: Optional[jax.Array] = None
+    gain_map: Optional[jax.Array] = None
+    chunk_rows: int = BSS2.signed_rows
+    col_blocks: Optional[Tuple[int, ...]] = None
+
+    @property
+    def k_pad(self) -> int:
+        return self.codes.shape[-2]
+
+    @property
+    def w_eff(self) -> jax.Array:
+        """The dequantized fp32 effective weights [.., K_pad, N] - the
+        exact array the legacy bake stored as a leaf."""
+        w = self.codes.astype(jnp.float32)
+        if self.col_gain is not None:
+            w = w * self.col_gain[..., None, :]
+        if self.row_gain is not None:
+            if self.col_blocks is None:
+                w = w * self.row_gain[..., 0, :, None]
+            else:
+                parts, c0 = [], 0
+                for gi, nb in enumerate(self.col_blocks):
+                    parts.append(
+                        w[..., :, c0:c0 + nb]
+                        * self.row_gain[..., gi, :, None]
+                    )
+                    c0 += nb
+                w = jnp.concatenate(parts, axis=-1)
+        if self.chunk_gain is not None:
+            w = w * jnp.repeat(self.chunk_gain, self.chunk_rows, axis=-2)
+        if self.gain_map is not None:
+            w = w * self.gain_map
+        return w
+
+    def packed(self) -> "WeightStore":
+        """Cast concrete float codes to int8 (values are in [-63, 63] by
+        the quantizer).  A no-op on traced codes - packing under a trace
+        would break the STE gradient of HIL re-lowering - and on stores
+        that are already packed."""
+        if isinstance(self.codes, jax.core.Tracer):
+            return self
+        if self.codes.dtype == jnp.int8:
+            return self
+        return dataclasses.replace(
+            self, codes=self.codes.astype(jnp.int8)
+        )
+
+
+jax.tree_util.register_dataclass(
+    WeightStore,
+    data_fields=[
+        "codes", "w_scale", "gain", "col_gain", "row_gain", "chunk_gain",
+        "gain_map",
+    ],
+    meta_fields=["chunk_rows", "col_blocks"],
+)
+
+
+@dataclasses.dataclass(frozen=True)
 class LayerPlan:
     """One lowered analog layer (frozen pytree).
 
     Array fields (pytree leaves):
-      w_eff:        [K_pad, N] quantized codes x fixed-pattern gain,
-                    K padded to a chunk multiple at lower time.
-      w_scale:      [1, N] per-column weight LSB.
+      store:        the :class:`WeightStore` - packed int8 weight codes,
+                    per-column weight LSB, calibrated gain and the
+                    fixed-pattern/measured gain tables.  ``w_eff`` /
+                    ``w_scale`` / ``gain`` are derived views over it
+                    (the legacy leaf names, kept as properties).
       a_scale:      scalar static activation LSB (used when
                     ``act_calib == "static"``; dynamic calib recomputes
                     per call inside run()).
@@ -100,7 +214,6 @@ class LayerPlan:
                     dequantization - use it instead of ``a_scale`` (the
                     layer's own calibrated scale, kept for solo
                     lowering).  None: plain layer (legacy behavior).
-      gain:         scalar (or [N]) calibrated analog gain.
       chunk_offset: [C, N] fixed-pattern ADC offsets or None.
       colsum:       [N] column sums of w_eff (offset-encoding correction
                     term) or None.
@@ -117,10 +230,8 @@ class LayerPlan:
                     before the next layer (the conv->fc1 im2col glue).
     """
 
-    w_eff: jax.Array
-    w_scale: jax.Array
+    store: WeightStore
     a_scale: jax.Array
-    gain: jax.Array
     chunk_offset: Optional[jax.Array]
     colsum: Optional[jax.Array]
     bias: Optional[jax.Array]
@@ -134,15 +245,35 @@ class LayerPlan:
     a_scale_in: Optional[jax.Array] = None
 
     @property
+    def w_eff(self) -> jax.Array:
+        """Derived [.., K_pad, N] effective weights (dequantized in-graph
+        from the packed store; bit-exact vs the legacy fp32 bake)."""
+        return self.store.w_eff
+
+    @property
+    def w_scale(self) -> jax.Array:
+        return self.store.w_scale
+
+    @property
+    def gain(self) -> jax.Array:
+        return self.store.gain
+
+    @property
+    def k_pad(self) -> int:
+        """Chunk-padded input width - shape queries go through here (or
+        :attr:`WeightStore.codes`) so they never materialize the dequant
+        view."""
+        return self.store.codes.shape[-2]
+
+    @property
     def n_chunks(self) -> int:
-        return self.w_eff.shape[0] // self.chunk_rows
+        return self.store.codes.shape[0] // self.chunk_rows
 
 
 jax.tree_util.register_dataclass(
     LayerPlan,
     data_fields=[
-        "w_eff", "w_scale", "a_scale", "gain", "chunk_offset", "colsum",
-        "bias", "a_scale_in",
+        "store", "a_scale", "chunk_offset", "colsum", "bias", "a_scale_in",
     ],
     meta_fields=[
         "k", "n", "chunk_rows", "signed_input", "epilogue", "shift",
@@ -216,8 +347,12 @@ class MegakernelPack:
     Pallas megakernel (built once by :func:`repro.exec.lower.pack_megakernel`).
 
     Array fields (pytree leaves):
-      w_cat:    [sum(k_pad), n_max] per-layer effective weights, columns
-                zero-padded to the common lane width, row-concatenated.
+      stores:   the per-layer :class:`WeightStore` records - shared with
+                the chain's :class:`LayerPlan` leaves (same arrays, not
+                copies), so the pack adds no weight bytes.  ``w_cat``
+                ([sum(k_pad), n_max] effective weights, columns
+                zero-padded to the common lane width, row-concatenated)
+                is a derived view packed in-graph at dispatch time.
       gain:     [L, n_max] per-layer analog gains (broadcast + padded).
       off:      [sum(n_chunks), n_max] per-layer chunk offsets (zeros where
                 a layer has none), chunk-concatenated.
@@ -241,7 +376,7 @@ class MegakernelPack:
                   attention+MLP glue geometry, or None.
     """
 
-    w_cat: jax.Array
+    stores: Tuple[WeightStore, ...]
     gain: jax.Array
     off: jax.Array
     schedule: tuple
@@ -254,6 +389,18 @@ class MegakernelPack:
     block: Optional[tuple] = None
 
     @property
+    def w_cat(self) -> jax.Array:
+        """Derived [sum(k_pad), n_max] packed effective weights: each
+        store's dequant view column-padded to the lane width (the static
+        schedule carries each layer's true ``n``) and row-concatenated -
+        bit-exact vs the legacy baked leaf."""
+        blocks = [
+            jnp.pad(s.w_eff, ((0, 0), (0, self.n_max - meta.n)))
+            for s, meta in zip(self.stores, self.schedule)
+        ]
+        return jnp.concatenate(blocks, axis=0)
+
+    @property
     def extras(self):
         """The float-glue operand tuple the kernel dispatch consumes
         (``None`` for a pure code-domain pack)."""
@@ -264,7 +411,7 @@ class MegakernelPack:
 
 jax.tree_util.register_dataclass(
     MegakernelPack,
-    data_fields=["w_cat", "gain", "off", "deq", "bias", "enc", "ln"],
+    data_fields=["stores", "gain", "off", "deq", "bias", "enc", "ln"],
     meta_fields=["schedule", "n_max", "chunk_rows", "block"],
 )
 

@@ -111,7 +111,7 @@ def run_layer(
     """
     in_dtype = x.dtype
     x = x.astype(jnp.float32)
-    k_pad = lp.w_eff.shape[0]
+    k_pad = lp.k_pad
     rk = None if (cfg.deterministic or key is None) else key
 
     if x_is_codes:
@@ -225,11 +225,11 @@ def run_batch_concat(
             "inputs"
         )
     lp = gp.fused
-    if getattr(lp.w_eff, "ndim", 3) != 3:
+    if getattr(lp.store.codes, "ndim", 3) != 3:
         raise ValueError(
             "run_batch_concat expects member-leading [G, K_pad, N] plan "
             "leaves (scan-stacked group plans must be sliced by the scan "
-            f"first), got w_eff ndim {lp.w_eff.ndim}"
+            f"first), got codes ndim {lp.store.codes.ndim}"
         )
     x = jnp.stack([jnp.asarray(xi) for xi in xs], axis=0)
     # ONE dispatch for the whole group: the vmapped member axis is a
@@ -273,7 +273,7 @@ def run_expert_stack(
         jax.lax.stop_gradient(jnp.abs(xf)).max() + 1e-9
     )
     inner = cfg.replace(use_pallas=False, signed_input="none")
-    k_pad = lp.w_eff.shape[-2]
+    k_pad = lp.k_pad
     a_pos = _pad_codes(quant.quantize_act(xf, a_scale), k_pad)
     a_neg = _pad_codes(quant.quantize_act(-xf, a_scale), k_pad)
 
@@ -327,7 +327,7 @@ def _run_layer_fused_infer(
     Pallas kernel (no custom VJP - inference only)."""
     from repro.kernels import ops as kernel_ops
 
-    a = _pad_codes(codes.astype(jnp.float32), lp.w_eff.shape[0])
+    a = _pad_codes(codes.astype(jnp.float32), lp.k_pad)
     batch_shape = a.shape[:-1]
     epi = (EPILOGUE_RELU_SHIFT, lp.shift) \
         if lp.epilogue == EPILOGUE_RELU_SHIFT else None
@@ -375,7 +375,7 @@ def _run_megakernel(
     lp = plan.layers[-1]
     x2 = x.astype(jnp.float32).reshape(-1, x.shape[-1])
     if mega.schedule[0].encode == "codes":
-        x2 = _pad_codes(x2, plan.layers[0].w_eff.shape[0])
+        x2 = _pad_codes(x2, plan.layers[0].k_pad)
     _count()
     y_int = kernel_ops.analog_plan_codes(
         x2, mega.w_cat, mega.gain, mega.off,

@@ -1,0 +1,218 @@
+"""Plan store: save/load lowered artifacts as versioned ``.npz`` files.
+
+The packed-weight refactor (ISSUE 8) makes a lowered plan exactly what
+the chip stores - int8 weight codes plus small gain/offset tables - so a
+plan is worth persisting: serve cold-start loads the packed artifact and
+skips ``lower()`` entirely (``lower_us`` for one transformer block is
+~0.4 s), and the on-disk bytes scale with the 6-bit codes instead of the
+fp32 effective weights.
+
+Format (mirrors :mod:`repro.calib.snapshot`): one ``np.savez`` archive
+holding
+
+- ``__version__``: the format tag (loading any other version refuses
+  with a re-save hint rather than mis-parsing),
+- ``__tree__``: a JSON structure descriptor - nested nodes tagging each
+  plan/layer/store/group/glue/dict/tuple and referencing arrays by index,
+- ``a0, a1, ...``: the array leaves, dtypes preserved (int8 codes stay
+  int8 on disk - this is where the packed-bytes win lands).
+
+``save_plan`` accepts any lowered artifact: an
+:class:`~repro.exec.plan.AnalogPlan` (stack or block), a
+:class:`~repro.exec.plan.GroupPlan` / :class:`~repro.exec.plan.LayerPlan`,
+or a whole pre-lowered params tree (dicts with ``"_plan"`` /
+``"_groups"`` entries).  Round-trips are bit-exact; a megakernel packing
+is recorded as a flag and re-packed at load time (same schedule, shared
+stores - re-packing performs no lowering work, so a cache-loaded plan
+keeps ``lowering_count() == 0``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analog import AnalogConfig
+from repro.core.noise import NoiseConfig
+from repro.exec.plan import (
+    AnalogPlan,
+    BlockGlue,
+    GroupPlan,
+    LayerPlan,
+    MegakernelPack,
+    WeightStore,
+)
+
+FORMAT_VERSION = "repro-plan-v1"
+
+_LAYER_META = ("k", "n", "chunk_rows", "signed_input", "epilogue", "shift",
+               "flatten_out")
+_LAYER_DATA = ("store", "a_scale", "chunk_offset", "colsum", "bias",
+               "a_scale_in")
+_STORE_DATA = ("codes", "w_scale", "gain", "col_gain", "row_gain",
+               "chunk_gain", "gain_map")
+_GLUE_META = ("n_heads", "n_kv_heads", "head_dim", "seq", "rope_theta",
+              "d_ff", "eps")
+
+
+def _encode(obj, arrays: list):
+    """Recursively render a lowered artifact as a JSON-able descriptor,
+    appending array leaves (dtype-preserved) to ``arrays``."""
+    if obj is None:
+        return {"t": "none"}
+    if isinstance(obj, AnalogPlan):
+        return {
+            "t": "plan",
+            "layers": [_encode(lp, arrays) for lp in obj.layers],
+            "cfg": _encode_cfg(obj.cfg),
+            "input_domain": obj.input_domain,
+            "block": _encode(obj.block, arrays),
+            "mega": obj.mega is not None,
+        }
+    if isinstance(obj, LayerPlan):
+        node = {"t": "layer",
+                "meta": {f: getattr(obj, f) for f in _LAYER_META}}
+        for f in _LAYER_DATA:
+            node[f] = _encode(getattr(obj, f), arrays)
+        return node
+    if isinstance(obj, WeightStore):
+        node = {"t": "store", "chunk_rows": obj.chunk_rows,
+                "col_blocks": (None if obj.col_blocks is None
+                               else list(obj.col_blocks))}
+        for f in _STORE_DATA:
+            node[f] = _encode(getattr(obj, f), arrays)
+        return node
+    if isinstance(obj, GroupPlan):
+        return {
+            "t": "group", "kind": obj.kind,
+            "member_names": list(obj.member_names),
+            "member_ns": list(obj.member_ns),
+            "fused": _encode(obj.fused, arrays),
+        }
+    if isinstance(obj, BlockGlue):
+        node = {"t": "glue",
+                "meta": {f: getattr(obj, f) for f in _GLUE_META}}
+        node["ln1"] = _encode(obj.ln1, arrays)
+        node["ln2"] = _encode(obj.ln2, arrays)
+        return node
+    if isinstance(obj, MegakernelPack):
+        raise TypeError(
+            "save a MegakernelPack via its owning AnalogPlan (the pack is "
+            "re-built from the layers' stores at load time)"
+        )
+    if isinstance(obj, dict):
+        keys = list(obj.keys())
+        if not all(isinstance(k, str) for k in keys):
+            raise TypeError(f"non-string dict keys are not storable: {keys}")
+        return {"t": "dict", "k": keys,
+                "v": [_encode(obj[k], arrays) for k in keys]}
+    if isinstance(obj, (list, tuple)):
+        return {"t": "list" if isinstance(obj, list) else "tuple",
+                "v": [_encode(v, arrays) for v in obj]}
+    if isinstance(obj, (bool, int, float, str)):
+        return {"t": "py", "v": obj}
+    arr = np.asarray(obj)
+    if arr.dtype == object:
+        raise TypeError(f"cannot store leaf of type {type(obj).__name__}")
+    arrays.append(arr)
+    return {"t": "arr", "i": len(arrays) - 1}
+
+
+def _encode_cfg(cfg: AnalogConfig) -> dict:
+    d = dataclasses.asdict(cfg)
+    return d
+
+
+def _decode_cfg(d: dict) -> AnalogConfig:
+    d = dict(d)
+    d["noise"] = NoiseConfig(**d["noise"])
+    return AnalogConfig(**d)
+
+
+def _decode(node, arrays):
+    t = node["t"]
+    if t == "none":
+        return None
+    if t == "arr":
+        return jnp.asarray(arrays[node["i"]])
+    if t == "py":
+        return node["v"]
+    if t == "dict":
+        return {k: _decode(v, arrays)
+                for k, v in zip(node["k"], node["v"])}
+    if t == "list":
+        return [_decode(v, arrays) for v in node["v"]]
+    if t == "tuple":
+        return tuple(_decode(v, arrays) for v in node["v"])
+    if t == "store":
+        kw = {f: _decode(node[f], arrays) for f in _STORE_DATA}
+        cb = node["col_blocks"]
+        return WeightStore(
+            chunk_rows=int(node["chunk_rows"]),
+            col_blocks=None if cb is None else tuple(int(x) for x in cb),
+            **kw,
+        )
+    if t == "layer":
+        kw = {f: _decode(node[f], arrays) for f in _LAYER_DATA}
+        return LayerPlan(**kw, **node["meta"])
+    if t == "group":
+        return GroupPlan(
+            kind=node["kind"],
+            fused=_decode(node["fused"], arrays),
+            member_names=tuple(node["member_names"]),
+            member_ns=tuple(int(x) for x in node["member_ns"]),
+        )
+    if t == "glue":
+        return BlockGlue(
+            ln1=_decode(node["ln1"], arrays),
+            ln2=_decode(node["ln2"], arrays),
+            **node["meta"],
+        )
+    if t == "plan":
+        from repro.exec.lower import pack_megakernel
+
+        plan = AnalogPlan(
+            layers=tuple(_decode(lp, arrays) for lp in node["layers"]),
+            cfg=_decode_cfg(node["cfg"]),
+            input_domain=node["input_domain"],
+            block=_decode(node["block"], arrays),
+        )
+        if node["mega"]:
+            # re-pack from the loaded stores: pure repackaging, no
+            # quantization - lowering_count() stays where it was
+            plan = dataclasses.replace(plan, mega=pack_megakernel(plan))
+        return plan
+    raise ValueError(f"unknown plan-store node tag {t!r}")
+
+
+def save_plan(path: str, lowered) -> None:
+    """Persist a lowered artifact (plan / group / layer / pre-lowered
+    params tree) to a versioned ``.npz`` archive at ``path``."""
+    arrays: list = []
+    tree = _encode(lowered, arrays)
+    np.savez(
+        path,
+        __version__=np.asarray(FORMAT_VERSION),
+        __tree__=np.asarray(json.dumps(tree)),
+        **{f"a{i}": a for i, a in enumerate(arrays)},
+    )
+
+
+def load_plan(path: str):
+    """Load a lowered artifact saved by :func:`save_plan` (bit-exact;
+    megakernel packings are re-packed from the loaded stores)."""
+    with np.load(path, allow_pickle=False) as z:
+        version = str(z["__version__"])
+        if version != FORMAT_VERSION:
+            raise ValueError(
+                f"plan store {path!r} has format {version!r}, this build "
+                f"reads {FORMAT_VERSION!r}; re-lower and re-save the plan"
+            )
+        tree = json.loads(str(z["__tree__"]))
+        arrays = {}
+        for k in z.files:
+            if k.startswith("a"):
+                arrays[int(k[1:])] = z[k]
+    return _decode(tree, arrays)

@@ -28,6 +28,75 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _mvm_chunk_scan(a_code, w_eff, gain, chunk_offset, chunk_rows):
+    """Faithful chunked VMM with an O(M, N) live set: ``lax.scan`` over
+    the row chunks, accumulating each chunk's clipped ADC codes, instead
+    of materializing the oracle's full [M, C, N] per-chunk tensor (the
+    fused split path doubles M, so that tensor is what made the fused
+    jnp dispatch SLOWER than per-call at bench shapes).  Faithful-only:
+    per-chunk ADC codes are integer-valued f32, so the scan's running
+    sum is bit-exact against the oracle's ``sum(axis=1)`` under any
+    order; fast mode sums pre-round reals, where accumulation order
+    matters at the ulp, and keeps the oracle path."""
+    m, k = a_code.shape
+    n = w_eff.shape[1]
+    assert k % chunk_rows == 0, (k, chunk_rows)
+    c = k // chunk_rows
+    a_c = jnp.moveaxis(
+        a_code.reshape(m, c, chunk_rows).astype(jnp.float32), 1, 0
+    )
+    w_c = w_eff.reshape(c, chunk_rows, n).astype(jnp.float32)
+    off = (jnp.zeros((c, 1), jnp.float32) if chunk_offset is None
+           else chunk_offset.astype(jnp.float32))
+
+    def step(acc, xs):
+        a_i, w_i, o_i = xs
+        v = jnp.einsum("mk,kn->mn", a_i, w_i,
+                       preferred_element_type=jnp.float32) * gain + o_i
+        return acc + jnp.clip(jnp.round(v), BSS2.adc_min, BSS2.adc_max), None
+
+    y, _ = jax.lax.scan(step, jnp.zeros((m, n), jnp.float32),
+                        (a_c, w_c, off))
+    return y
+
+
+def _mvm_split_chunk_scan(a_pos, a_neg, w_eff, gain, chunk_offset,
+                          chunk_rows):
+    """Faithful fused-split VMM as one chunk scan: both passes share each
+    weight chunk while it is live and their ADC codes subtract into a
+    single [M, N] accumulator - no [2M, K] activation concat, no
+    [2M, C, N] per-chunk tensor.  Per-pass arithmetic is identical to
+    the two-pass oracle and the codes are integer-valued f32, so the
+    per-chunk subtraction order is bit-exact against ``yp - yn``."""
+    m, k = a_pos.shape
+    n = w_eff.shape[1]
+    assert k % chunk_rows == 0, (k, chunk_rows)
+    c = k // chunk_rows
+    a_p = jnp.moveaxis(
+        a_pos.reshape(m, c, chunk_rows).astype(jnp.float32), 1, 0
+    )
+    a_n = jnp.moveaxis(
+        a_neg.reshape(m, c, chunk_rows).astype(jnp.float32), 1, 0
+    )
+    w_c = w_eff.reshape(c, chunk_rows, n).astype(jnp.float32)
+    off = (jnp.zeros((c, 1), jnp.float32) if chunk_offset is None
+           else chunk_offset.astype(jnp.float32))
+
+    def step(acc, xs):
+        ap_i, an_i, w_i, o_i = xs
+        vp = jnp.einsum("mk,kn->mn", ap_i, w_i,
+                        preferred_element_type=jnp.float32) * gain + o_i
+        vn = jnp.einsum("mk,kn->mn", an_i, w_i,
+                        preferred_element_type=jnp.float32) * gain + o_i
+        adc_p = jnp.clip(jnp.round(vp), BSS2.adc_min, BSS2.adc_max)
+        adc_n = jnp.clip(jnp.round(vn), BSS2.adc_min, BSS2.adc_max)
+        return acc + (adc_p - adc_n), None
+
+    y, _ = jax.lax.scan(step, jnp.zeros((m, n), jnp.float32),
+                        (a_p, a_n, w_c, off))
+    return y
+
+
 @functools.partial(
     jax.custom_vjp, nondiff_argnums=(4, 5, 6)
 )
@@ -99,10 +168,15 @@ def analog_mvm_split(
 
     ``fused=True`` (default) shares the weight tiles between the two
     passes: on the Pallas path via the single-grid split kernel, on the
-    jnp path by stacking the two activation batches into one chunked
-    matmul.  Both are bit-exact (fp32) against the ``fused=False``
-    two-pass oracle because per-pass arithmetic is identical - only the
-    schedule changes.
+    jnp path (faithful) via a chunk scan that subtracts the two passes'
+    integer ADC codes in place (:func:`_mvm_split_chunk_scan` - the fix
+    for the fused dispatch benching SLOWER than per-call).  The code-
+    domain arithmetic is exact under any accumulation order; per-chunk
+    pre-round products carry the usual fp32 contraction-order
+    sensitivity at exact round boundaries (same caveat the Pallas kernel
+    documents), which the pinned bit-exactness tests bound.  Fast mode
+    sums pre-round reals and keeps the stacked-batch oracle matmul,
+    bit-exact against the two-pass oracle by construction.
     """
     use = _on_tpu() if use_pallas is None else use_pallas
     if not fused:
@@ -117,9 +191,15 @@ def analog_mvm_split(
             interpret=not _on_tpu(),
             compute_dtype=jnp.bfloat16 if _on_tpu() else jnp.float32,
         )
-    # fused jnp path: one [2M, K] x [K, N] chunked matmul over shared
-    # weights (rows are independent, so per-row results equal the two-pass
-    # oracle bit-for-bit), then one digital subtraction.
+    # fused jnp path, faithful: stream the chunks through a scan that
+    # shares each weight chunk between the pos/neg passes and subtracts
+    # their integer ADC codes in place (bit-exact vs the two-pass
+    # oracle; see _mvm_split_chunk_scan).  Fast mode sums pre-round
+    # reals - accumulation order matters at the ulp there - and keeps
+    # the oracle's stacked [2M, K] chunked matmul.
+    if faithful:
+        return _mvm_split_chunk_scan(a_pos, a_neg, w_eff, gain,
+                                     chunk_offset, chunk_rows)
     m = a_pos.shape[0]
     y2 = ref_lib.analog_mvm_ref(
         jnp.concatenate([a_pos, a_neg], axis=0), w_eff, gain, chunk_offset,
@@ -179,8 +259,14 @@ def analog_mvm_infer(
             a_pos, a_neg, w_eff, gain, chunk_offset, **kw
         )
     if a_neg is None:
-        y = ref_lib.analog_mvm_ref(a_pos, w_eff, gain, chunk_offset,
-                                   chunk_rows=chunk_rows, faithful=faithful)
+        y = (_mvm_chunk_scan(a_pos, w_eff, gain, chunk_offset, chunk_rows)
+             if faithful else
+             ref_lib.analog_mvm_ref(a_pos, w_eff, gain, chunk_offset,
+                                    chunk_rows=chunk_rows,
+                                    faithful=faithful))
+    elif faithful:
+        y = _mvm_split_chunk_scan(a_pos, a_neg, w_eff, gain,
+                                  chunk_offset, chunk_rows)
     else:
         m = a_pos.shape[0]
         y2 = ref_lib.analog_mvm_ref(

@@ -132,7 +132,7 @@ def chain_ineligible_reason(plan: AnalogPlan) -> Optional[str]:
         where = (
             f"layer {i} (consumes {domains[i]!r}, epilogue {lp.epilogue!r})"
         )
-        if getattr(lp.w_eff, "ndim", 2) != 2:
+        if getattr(lp.store.codes, "ndim", 2) != 2:
             return f"{where}: scan-stacked (vmapped) plans are not packable"
         if lp.chunk_rows != layers[0].chunk_rows:
             return (

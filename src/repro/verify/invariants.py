@@ -125,9 +125,9 @@ class _Ctx:
         default_factory=list)
     groups: List[Tuple[str, GroupPlan]] = dataclasses.field(
         default_factory=list)
-    # paths of group-fused layers: their w_eff carries the member/expert
-    # axis (batch_concat / expert_stack), so geometry rules allow one
-    # more leading axis than a plain layer
+    # paths of group-fused layers: their packed codes carry the member/
+    # expert axis (batch_concat / expert_stack), so geometry rules allow
+    # one more leading axis than a plain layer
     fused_paths: set = dataclasses.field(default_factory=set)
 
 
@@ -161,19 +161,20 @@ def _shape(x) -> Optional[tuple]:
 # --------------------------------------------------------------------------
 @rule("chunk-alignment", cheap=True)
 def _chunk_alignment(ctx: _Ctx):
-    """Every baked table matches the layer's chunk grid: w_eff is padded
-    to whole chunks and [*, K_pad, N]; w_scale / chunk_offset / colsum /
-    bias trailing dims agree with (n_chunks, N)."""
+    """Every baked table matches the layer's chunk grid: the packed
+    codes are padded to whole chunks and [*, K_pad, N]; w_scale /
+    chunk_offset / colsum / bias trailing dims agree with
+    (n_chunks, N)."""
     for path, lp in ctx.layers:
-        w = lp.w_eff
+        w = lp.store.codes
         nd = getattr(w, "ndim", 0)
         # group-fused layers carry the member/expert axis, and a scan
         # stack prepends one more
         nd_ok = (2, 3, 4) if path in ctx.fused_paths else (2, 3)
         if nd not in nd_ok:
             yield Diagnostic(
-                "chunk-alignment", f"{path}.w_eff",
-                f"w_eff must be [K_pad, N] with at most "
+                "chunk-alignment", f"{path}.store.codes",
+                f"packed codes must be [K_pad, N] with at most "
                 f"{nd_ok[-1] - 2} stack/member axes; got ndim={nd}",
                 "lower through repro.exec.lower / repro.api.compile",
             )
@@ -182,7 +183,7 @@ def _chunk_alignment(ctx: _Ctx):
         stack = tuple(int(s) for s in w.shape[:-2])
         if lp.chunk_rows <= 0 or k_pad % lp.chunk_rows:
             yield Diagnostic(
-                "chunk-alignment", f"{path}.w_eff",
+                "chunk-alignment", f"{path}.store.codes",
                 f"{k_pad} weight rows are not a whole number of "
                 f"{lp.chunk_rows}-row chunks",
                 "re-lower the layer (lower_layer pads K to the chunk "
@@ -191,14 +192,14 @@ def _chunk_alignment(ctx: _Ctx):
             continue
         if k_pad < lp.k:
             yield Diagnostic(
-                "chunk-alignment", f"{path}.w_eff",
+                "chunk-alignment", f"{path}.store.codes",
                 f"padded rows K_pad={k_pad} < logical k={lp.k}",
                 "static k must be the pre-padding logical width",
             )
         if n != lp.n:
             yield Diagnostic(
-                "chunk-alignment", f"{path}.w_eff",
-                f"w_eff has {n} columns but static n={lp.n}",
+                "chunk-alignment", f"{path}.store.codes",
+                f"packed codes have {n} columns but static n={lp.n}",
                 "re-lower the layer; n is the output width",
             )
         n_chunks = k_pad // lp.chunk_rows
@@ -388,7 +389,7 @@ def _dispatch_count(ctx: _Ctx):
         row0 = c0 = 0
         for i, (m, lp) in enumerate(zip(mega.schedule, layers)):
             spath = f"{mpath}.schedule[{i}]"
-            k_pad = int(lp.w_eff.shape[-2])
+            k_pad = int(lp.store.codes.shape[-2])
             n_chunks = k_pad // lp.chunk_rows
             geom = dict(k=lp.k, n=lp.n, k_pad=k_pad, n_chunks=n_chunks,
                         shift=lp.shift, row0=row0, c0=c0,
@@ -421,13 +422,16 @@ def _dispatch_count(ctx: _Ctx):
                 )
             row0 += k_pad
             c0 += n_chunks
-        if _shape(mega.w_cat) is not None and tuple(
-            mega.w_cat.shape
-        ) != (row0, mega.n_max):
+        rows = sum(
+            int(s.codes.shape[-2]) for s in mega.stores
+            if _shape(s.codes) is not None
+        )
+        if len(mega.stores) != len(layers) or rows != row0:
             yield Diagnostic(
-                "dispatch-count", f"{mpath}.w_cat",
-                f"packed weights are {tuple(mega.w_cat.shape)}, "
-                f"schedule covers ({row0}, {mega.n_max})",
+                "dispatch-count", f"{mpath}.stores",
+                f"packed stores cover {len(mega.stores)} layers / "
+                f"{rows} rows, schedule covers {len(layers)} layers / "
+                f"{row0} rows",
                 "re-pack",
             )
 
@@ -455,7 +459,7 @@ def _group_layout(ctx: _Ctx):
             )
             continue
         lp = gp.fused
-        nd = getattr(lp.w_eff, "ndim", 0)
+        nd = getattr(lp.store.codes, "ndim", 0)
         if gp.kind == GROUP_COLUMN_CONCAT:
             if sum(gp.member_ns) != lp.n:
                 yield Diagnostic(
@@ -479,12 +483,12 @@ def _group_layout(ctx: _Ctx):
             # a scan stack prepends one axis: [G, K_pad, N] plain,
             # [S, G, K_pad, N] under scan; the member axis sits at nd-3
             ax = max(nd - 3, 0)
-            if nd not in (3, 4) or int(lp.w_eff.shape[ax]) != g:
+            if nd not in (3, 4) or int(lp.store.codes.shape[ax]) != g:
                 yield Diagnostic(
-                    "group-layout", f"{path}.fused.w_eff",
+                    "group-layout", f"{path}.fused.store.codes",
                     f"batch_concat needs a [{g}, K_pad, N] member-"
                     f"stacked weight (optional scan-stack prefix); got "
-                    f"shape {_shape(lp.w_eff)}",
+                    f"shape {_shape(lp.store.codes)}",
                     "lower via lower_batch_concat",
                 )
             if any(n != lp.n for n in gp.member_ns):
@@ -517,10 +521,10 @@ def _group_layout(ctx: _Ctx):
                 )
             if nd not in (3, 4):
                 yield Diagnostic(
-                    "group-layout", f"{path}.fused.w_eff",
+                    "group-layout", f"{path}.fused.store.codes",
                     f"expert_stack needs an [E, K_pad, N] stacked "
                     f"weight (optional scan-stack prefix); got shape "
-                    f"{_shape(lp.w_eff)}",
+                    f"{_shape(lp.store.codes)}",
                     "lower via lower_expert_stack",
                 )
 
@@ -567,8 +571,10 @@ def _calibration_compat(ctx: _Ctx):
                     f"{ts}",
                     "measure per-(chunk, column) tables",
                 )
-            elif lp is not None and getattr(lp.w_eff, "ndim", 2) == 2:
-                n_chunks = int(lp.w_eff.shape[-2]) // lp.chunk_rows
+            elif lp is not None and getattr(
+                lp.store.codes, "ndim", 2
+            ) == 2:
+                n_chunks = int(lp.store.codes.shape[-2]) // lp.chunk_rows
                 if ts != (n_chunks, lp.n):
                     yield Diagnostic(
                         "calibration-compat",
@@ -696,6 +702,112 @@ def _sharding_specs(ctx: _Ctx):
                 "sharding-specs", f"{ppath}{key}",
                 "plan leaf missing from the derived sharding specs",
                 "extend distributed.sharding to cover this leaf",
+            )
+
+
+@rule("packed-layout", cheap=False)
+def _packed_layout(ctx: _Ctx):
+    """Every plan's WeightStore is a valid packed bake: codes are 6-bit
+    signed values (int8, or integer-valued fp32 straight out of a vmap
+    trace), the gain tables match the chunk/column-block layout, and the
+    dequantized ``w_eff`` view reproduces the code-times-gain product on
+    a one-chunk probe (an independent numpy recompute, so a drifted
+    dequant path cannot self-certify)."""
+    import numpy as np
+
+    from repro.core.hw import BSS2
+
+    for path, lp in ctx.layers:
+        s = lp.store
+        spath = f"{path}.store"
+        codes = np.asarray(s.codes)
+        if codes.dtype == np.int8:
+            pass
+        elif codes.dtype == np.float32:
+            if not np.array_equal(codes, np.round(codes)):
+                yield Diagnostic(
+                    "packed-layout", f"{spath}.codes",
+                    "fp32 codes hold non-integer values",
+                    "codes are quantize_weight outputs; re-lower",
+                )
+                continue
+        else:
+            yield Diagnostic(
+                "packed-layout", f"{spath}.codes",
+                f"codes dtype {codes.dtype} is neither int8 nor fp32",
+                "lower through repro.exec.lower (WeightStore.packed)",
+            )
+            continue
+        amax = float(np.abs(codes).max()) if codes.size else 0.0
+        if amax > BSS2.w_max:
+            yield Diagnostic(
+                "packed-layout", f"{spath}.codes",
+                f"codes reach |{amax:.0f}| > the 6-bit signed range "
+                f"+-{BSS2.w_max}",
+                "codes are clipped at quantize time; re-lower",
+            )
+            continue
+        k_pad, n = int(codes.shape[-2]), int(codes.shape[-1])
+        pre = tuple(int(d) for d in codes.shape[:-2])
+        n_chunks = k_pad // max(s.chunk_rows, 1)
+        g = len(s.col_blocks) if s.col_blocks is not None else 1
+        if s.col_blocks is not None and sum(s.col_blocks) != n:
+            yield Diagnostic(
+                "packed-layout", f"{spath}.col_blocks",
+                f"column blocks {s.col_blocks} sum to "
+                f"{sum(s.col_blocks)} but the codes have {n} columns",
+                "re-lower the fused group",
+            )
+            continue
+        shapes = {
+            "w_scale": (s.w_scale, pre + (1, n)),
+            "col_gain": (s.col_gain, pre + (n,)),
+            "row_gain": (s.row_gain, pre + (g, k_pad)),
+            "chunk_gain": (s.chunk_gain, pre + (n_chunks, n)),
+            "gain_map": (s.gain_map, pre + (k_pad, n)),
+        }
+        bad = False
+        for field, (v, want) in shapes.items():
+            if v is not None and tuple(_shape(v)) != want:
+                yield Diagnostic(
+                    "packed-layout", f"{spath}.{field}",
+                    f"{field} shape {_shape(v)} does not match the "
+                    f"{want} packed layout",
+                    "re-lower the layer",
+                )
+                bad = True
+        if bad:
+            continue
+        # probe: the first chunk of the dequant view vs an independent
+        # numpy recompute of codes x gain tables (same multiply order)
+        cr = min(s.chunk_rows, k_pad)
+        w = codes[..., :cr, :].astype(np.float32)
+        if s.col_gain is not None:
+            w = w * np.asarray(s.col_gain)[..., None, :]
+        if s.row_gain is not None:
+            rg = np.asarray(s.row_gain)[..., :cr]
+            if s.col_blocks is None:
+                w = w * rg[..., 0, :, None]
+            else:
+                parts, c0 = [], 0
+                for gi, nb in enumerate(s.col_blocks):
+                    parts.append(
+                        w[..., :, c0:c0 + nb] * rg[..., gi, :, None]
+                    )
+                    c0 += nb
+                w = np.concatenate(parts, axis=-1)
+        if s.chunk_gain is not None:
+            w = w * np.asarray(s.chunk_gain)[..., :1, :]
+        if s.gain_map is not None:
+            w = w * np.asarray(s.gain_map)[..., :cr, :]
+        got = np.asarray(s.w_eff[..., :cr, :])
+        if not np.array_equal(got, w):
+            yield Diagnostic(
+                "packed-layout", f"{spath}.codes",
+                "dequantized w_eff view disagrees with the packed "
+                "codes x gain tables on the first-chunk probe",
+                "the store's gain tables and its dequant path drifted "
+                "apart; re-lower",
             )
 
 

@@ -2,7 +2,7 @@
 SOURCE level.
 
 The plan rules in :mod:`repro.verify.invariants` check artifacts after
-lowering; this module checks the code that produces them.  Four rules:
+lowering; this module checks the code that produces them.  Five rules:
 
 ``fpn-access``
     ``params["fpn"]`` / ``params.get("fpn")`` may be READ only by
@@ -27,6 +27,15 @@ lowering; this module checks the code that produces them.  Four rules:
     ``@dataclasses.dataclass(frozen=True)`` - plan pytrees are hashed
     into jit caches via their static metadata; mutation after
     registration corrupts cached executables.
+
+``packed-weights``
+    Plan weights are packed int8 codes + scale/gain tables
+    (:class:`repro.exec.plan.WeightStore`); ``w_eff`` is a DERIVED
+    dequantized view.  Constructing a ``WeightStore`` - or passing a
+    materialized ``w_eff=`` keyword - anywhere outside the lowering
+    (``exec/lower.py``), the plan definitions (``exec/plan.py``) and
+    the plan store (``exec/store.py``) would reintroduce a baked fp32
+    weight copy that drift hot-swaps and the plan cache cannot see.
 
 Suppress a finding with a trailing ``# verify: allow-<rule>`` comment on
 the offending line.  Tests are exempt (they exercise the forbidden
@@ -56,6 +65,13 @@ _SHIM_HOMES = (
 )
 _FPN_READERS = ("repro/exec/lower.py",)
 _FPN_READER_DIRS = ("repro/calib/",)
+# files allowed to build WeightStores / pass w_eff= (packing is the
+# lowering's job; plan.py defines the store, store.py deserializes it)
+_STORE_HOMES = (
+    "repro/exec/lower.py",
+    "repro/exec/plan.py",
+    "repro/exec/store.py",
+)
 DEFAULT_ROOTS = ("src", "benchmarks", "examples")
 
 
@@ -97,6 +113,7 @@ class _FileLint(ast.NodeVisitor):
             d in self.relpath for d in _FPN_READER_DIRS
         )
         self.shim_home = self.relpath.endswith(_SHIM_HOMES)
+        self.store_home = self.relpath.endswith(_STORE_HOMES)
 
     def _emit(self, rule: str, node: ast.AST, message: str) -> None:
         line = getattr(node, "lineno", 1)
@@ -148,6 +165,22 @@ class _FileLint(ast.NodeVisitor):
             )
         if name == "register_dataclass":
             self.registered.append(node)
+        if not self.store_home:
+            if name == "WeightStore":
+                self._emit(
+                    "packed-weights", node,
+                    "WeightStore() built outside exec.lower/plan/store: "
+                    "packing weight codes is the lowering's job",
+                )
+            for kw in node.keywords:
+                if kw.arg == "w_eff":
+                    self._emit(
+                        "packed-weights", node,
+                        "materialized w_eff= passed outside "
+                        "exec.lower/plan/store: w_eff is a derived view "
+                        "of the packed WeightStore, not a constructor "
+                        "argument",
+                    )
         if (
             self._ref_depth
             and isinstance(node.func, ast.Attribute)

@@ -62,7 +62,7 @@ class TestRegistry:
         want_cheap = {"chunk-alignment", "domain-chain", "pack-consistency",
                       "dispatch-count", "group-layout",
                       "calibration-compat"}
-        want_full = {"drift-swap", "sharding-specs"}
+        want_full = {"drift-swap", "sharding-specs", "packed-layout"}
         assert set(RULES) == want_cheap | want_full
         for r in RULES.values():
             assert r.doc, r.id
@@ -83,8 +83,9 @@ class TestRegistry:
 class TestChunkAlignment:
     def test_ragged_weight_rows_pinpointed(self):
         plan = _chain()
+        lp = plan.layers[1]
         bad = dataclasses.replace(
-            plan.layers[1], w_eff=plan.layers[1].w_eff[:-1]
+            lp, store=dataclasses.replace(lp.store, codes=lp.store.codes[:-1])
         )
         plan = dataclasses.replace(
             plan, layers=(plan.layers[0], bad) + plan.layers[2:]
@@ -93,7 +94,7 @@ class TestChunkAlignment:
             verify_plan(plan, rules=("chunk-alignment",)),
             "chunk-alignment",
         )
-        assert hits and hits[0].path == "plan.layers[1].w_eff"
+        assert hits and hits[0].path == "plan.layers[1].store.codes"
         assert "chunks" in hits[0].message
 
     def test_wrong_offset_grid_pinpointed(self):
@@ -231,10 +232,14 @@ class TestGroupLayout:
         gp = self._rwkv_group()
         assert gp.kind == "batch_concat"
         bad = dataclasses.replace(
-            gp, fused=dataclasses.replace(gp.fused, w_eff=gp.fused.w_eff[0])
+            gp, fused=dataclasses.replace(
+                gp.fused, store=dataclasses.replace(
+                    gp.fused.store, codes=gp.fused.store.codes[0]
+                )
+            )
         )
         hits = verify_plan(bad, rules=("group-layout",))
-        assert any(d.path.endswith(".fused.w_eff") for d in hits)
+        assert any(d.path.endswith(".fused.store.codes") for d in hits)
 
     def test_scan_stacked_batch_concat_clean(self):
         """The LM rwkv arch lowers its batch_concat group under vmap:
@@ -253,7 +258,7 @@ class TestGroupLayout:
             AnalogConfig(noise=NOISELESS),
         )
         gps = [gp for _, gp in _walk_groups(model.lower())]
-        assert any(gp.fused.w_eff.ndim == 4 for gp in gps)
+        assert any(gp.fused.store.codes.ndim == 4 for gp in gps)
         assert verify_plan(
             model.lower(),
             rules=("group-layout", "chunk-alignment"),
@@ -526,6 +531,27 @@ class TestLint:
         ok = src.replace("@dataclasses.dataclass",
                          "@dataclasses.dataclass(frozen=True)")
         assert lint_source(ok, "src/repro/exec/foo.py") == []
+
+    def test_packed_weights_rule(self):
+        build = ("from repro.exec.plan import WeightStore\n"
+                 "s = WeightStore(codes=c, w_scale=w, gain=g)\n")
+        hits = lint_source(build, "src/repro/models/foo.py")
+        assert hits and hits[0].rule == "packed-weights"
+        # the lowering, the plan definitions and the plan store may build
+        for home in ("src/repro/exec/lower.py", "src/repro/exec/plan.py",
+                     "src/repro/exec/store.py"):
+            assert lint_source(build, home) == []
+        weff = "lp = LayerPlan(w_eff=w, a_scale=a)\n"
+        hits = lint_source(weff, "src/repro/serve/foo.py")
+        assert hits and hits[0].rule == "packed-weights"
+        assert "derived view" in hits[0].message
+        # reading the derived view stays legal everywhere
+        assert lint_source(
+            "y = x @ lp.store.w_eff\n", "src/repro/models/foo.py"
+        ) == []
+        ok = ("s = WeightStore(codes=c, w_scale=w, gain=g)"
+              "  # verify: allow-packed-weights\n")
+        assert lint_source(ok, "src/repro/models/foo.py") == []
 
     def test_repo_is_lint_clean(self):
         assert run_lint(REPO) == []
