@@ -29,6 +29,8 @@ import subprocess
 import sys
 import time
 
+from repro.obs import trace as obs_trace
+
 
 def kernels_micro() -> None:
     """Per-kernel allclose + emulation timing (CSV: name,us_per_call)."""
@@ -43,19 +45,18 @@ def kernels_micro() -> None:
     w = jnp.round(jax.random.normal(k, (512, 512)) * 20)
     gain = jnp.full((512,), 0.02)
     for faithful in (True, False):
-        t0 = time.perf_counter()
-        got = ops.analog_mvm(a, w, gain, None, 128, faithful, True)
-        want = ref.analog_mvm_ref(a, w, gain, None, faithful=faithful)
-        dt = (time.perf_counter() - t0) * 1e6
-        err = float(abs(got - want).max())
         tag = "faithful" if faithful else "fast"
-        print(f"analog_mvm[{tag}],{dt:.0f}us,max_err={err}")
+        with obs_trace.span(f"bench.analog_mvm.{tag}") as sp:
+            got = ops.analog_mvm(a, w, gain, None, 128, faithful, True)
+            want = ref.analog_mvm_ref(a, w, gain, None, faithful=faithful)
+        err = float(abs(got - want).max())
+        print(f"analog_mvm[{tag}],{sp.dur_us:.0f}us,max_err={err}")
     x = jax.random.normal(k, (8, 4096))
-    t0 = time.perf_counter()
-    got = ops.maxmin_pool(x, 32, use_pallas=True)
-    want = ref.maxmin_pool_ref(x, 32)
-    dt = (time.perf_counter() - t0) * 1e6
-    print(f"maxmin_pool,{dt:.0f}us,exact={bool((got == want).all())}")
+    with obs_trace.span("bench.maxmin_pool") as sp:
+        got = ops.maxmin_pool(x, 32, use_pallas=True)
+        want = ref.maxmin_pool_ref(x, 32)
+    print(f"maxmin_pool,{sp.dur_us:.0f}us,"
+          f"exact={bool((got == want).all())}")
 
 
 def smoke() -> None:
@@ -65,8 +66,14 @@ def smoke() -> None:
     vs the per-call path (or the megakernel vs the layer-by-layer
     replay)."""
     from benchmarks import throughput
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import report as obs_report
 
-    t0 = time.time()
+    # one obs collector spans the whole smoke run: every _best_of /
+    # span measurement lands in BENCH_smoke_obs.jsonl next to the gated
+    # BENCH_smoke.json numbers (same timing implementation - ISSUE 9)
+    obs_metrics.reset_metrics()
+    tr = obs_trace.begin("bench-smoke")
     # static verification FIRST: a dispatch-count / treedef / packing
     # regression fails the job with a named rule + pytree path instead of
     # surfacing as an unexplained slowdown in the timings below.  Run in
@@ -146,11 +153,14 @@ def smoke() -> None:
            "rwkv_fused_vs_solo": rw,
            "moe_prelowered_vs_percall": mo, "calibrated_replay": cal,
            "plan_bytes": pb, "serve_cold_start": cs,
-           "wall_s": time.time() - t0}
+           "wall_s": (obs_trace.clock_us() - tr.t0_us) / 1e6}
     with open("BENCH_smoke.json", "w") as f:
         json.dump(out, f, indent=2, default=float)
+    obs_trace.end(tr)
+    obs_report.dump_run("BENCH_smoke_obs.jsonl", tr,
+                        obs_metrics.registry())
     print(f"\nsmoke benchmarks done in {out['wall_s']:.0f}s "
-          f"-> BENCH_smoke.json")
+          f"-> BENCH_smoke.json (+ BENCH_smoke_obs.jsonl)")
     # Two gate tiers since the PR-8 chunk-scan kernels: the faithful
     # fused-split path now lax.scans weight chunks, which sped EVERY
     # per-layer jnp dispatch 1.4-1.7x - including the per-call / solo

@@ -16,14 +16,13 @@ training speed.
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro import configs
 from repro.core.energy import LayerWork, SystemModel
 from repro.core.hw import BSS2
 from repro.core.partition import plan_model, plan_tiles
+from repro.obs import trace as obs_trace
 
 
 def analog_layer_shapes(cfg) -> list[tuple[int, int]]:
@@ -145,16 +144,9 @@ def plan_vs_percall_throughput(iters: int = 10) -> dict:
 
     out = {"shape": f"3x[{m}x{d}x{d}]", "dispatches": dispatches}
     for name, f in variants.items():
-        for _ in range(3):
-            f(x).block_until_ready()          # warmup past compile + jitter
-        best = float("inf")
-        for _ in range(4):                    # best-of-blocks vs CPU noise
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                f(x).block_until_ready()
-            best = min(best, (time.perf_counter() - t0) / iters)
-        out[f"{name}_us"] = best * 1e6
-        out[f"{name}_GOp/s"] = 2 * macs / best / 1e9
+        us = _best_of(f, x, iters=iters, label=f"plan_vs_percall.{name}")
+        out[f"{name}_us"] = us
+        out[f"{name}_GOp/s"] = 2 * macs / (us / 1e6) / 1e9
     out["plan_speedup"] = out["percall_us"] / out["plan_us"]
     out["fused_speedup"] = out["percall_us"] / out["plan_fused_us"]
     return out
@@ -200,10 +192,10 @@ def transformer_block_plan_throughput(iters: int = 10) -> dict:
         )
         return L.mlp_apply(p["mlp"], x + h, acfg)
 
-    t0 = time.perf_counter()
-    lowered = api.lower_tree(params, acfg)
-    jax.block_until_ready(jax.tree.leaves(lowered))
-    lower_us = (time.perf_counter() - t0) * 1e6
+    with obs_trace.span("bench.lower_tree") as sp:
+        lowered = api.lower_tree(params, acfg)
+        jax.block_until_ready(jax.tree.leaves(lowered))
+    lower_us = sp.dur_us
 
     fns = {"percall": (jax.jit(block), params),
            "plan": (jax.jit(block), lowered)}
@@ -213,15 +205,9 @@ def transformer_block_plan_throughput(iters: int = 10) -> dict:
         reset_dispatch_count()
         block(p, x)
         out["dispatches"][name] = dispatch_count()
-        for _ in range(3):
-            f(p, x).block_until_ready()
-        best = float("inf")
-        for _ in range(4):
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                f(p, x).block_until_ready()
-            best = min(best, (time.perf_counter() - t0) / iters)
-        out[f"{name}_us"] = best * 1e6
+        out[f"{name}_us"] = _best_of(
+            f, p, x, iters=iters, label=f"transformer_block.{name}"
+        )
     out["plan_speedup"] = out["percall_us"] / out["plan_us"]
     return out
 
@@ -254,25 +240,15 @@ def megakernel_vs_per_layer_throughput(iters: int = 10) -> dict:
     from repro.exec.run import run as run_plan
     from repro.models import ecg as ECG
 
-    def best_of(f, x):
-        for _ in range(3):
-            f(x).block_until_ready()
-        best = float("inf")
-        for _ in range(4):
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                f(x).block_until_ready()
-            best = min(best, (time.perf_counter() - t0) / iters)
-        return best * 1e6
-
     def entry(plan, x):
         out = {}
         for name, mk in (("per_layer", False), ("megakernel", True)):
             reset_dispatch_count()
             run_plan(plan, x, megakernel=mk)
             out[f"{name}_dispatches"] = dispatch_count()
-            out[f"{name}_us"] = best_of(
-                jax.jit(lambda c, mk=mk: run_plan(plan, c, megakernel=mk)), x
+            out[f"{name}_us"] = _best_of(
+                jax.jit(lambda c, mk=mk: run_plan(plan, c, megakernel=mk)),
+                x, iters=iters, label=f"megakernel.{name}",
             )
         out["speedup"] = out["per_layer_us"] / out["megakernel_us"]
         return out
@@ -371,18 +347,12 @@ def attention_block_megakernel_throughput(iters: int = 10) -> dict:
     return out
 
 
-def _best_of(f, *args, iters=10, warmup=3, blocks=4):
-    import jax
-
-    for _ in range(warmup):
-        jax.block_until_ready(f(*args))
-    best = float("inf")
-    for _ in range(blocks):
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            jax.block_until_ready(f(*args))
-        best = min(best, (time.perf_counter() - t0) / iters)
-    return best * 1e6
+def _best_of(f, *args, iters=10, warmup=3, blocks=4, label=None):
+    """Best-of-blocks µs/call - delegates to the shared obs timing loop
+    (``repro.obs.trace.timeit``) so bench entries and serve telemetry
+    measure through ONE implementation (ISSUE 9)."""
+    return obs_trace.timeit(f, *args, iters=iters, warmup=warmup,
+                            blocks=blocks, label=label)
 
 
 def rwkv_fused_vs_solo(iters: int = 10) -> dict:
@@ -524,10 +494,10 @@ def calibrated_vs_ideal_replay(iters: int = 10) -> dict:
     )
     lp = [params["conv"], params["fc1"], params["fc2"]]
     chips = calib.model_chips(spec, params, jax.random.PRNGKey(2))
-    t0 = time.perf_counter()
-    snap = calib.calibrate_model(spec, params, jax.random.PRNGKey(2),
-                                 chips=chips)
-    calibrate_us = (time.perf_counter() - t0) * 1e6
+    with obs_trace.span("bench.calibrate") as csp:
+        snap = calib.calibrate_model(spec, params, jax.random.PRNGKey(2),
+                                     chips=chips)
+    calibrate_us = csp.dur_us
     plans = {
         "ideal": lower_stack(lp, acfg, **kw),
         "calibrated": lower_stack(
@@ -547,13 +517,11 @@ def calibrated_vs_ideal_replay(iters: int = 10) -> dict:
     best = {name: float("inf") for name in plans}
     for _ in range(6):                 # interleave blocks against drift
         for name, plan in plans.items():
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                f(plan, cols).block_until_ready()
-            best[name] = min(best[name],
-                             (time.perf_counter() - t0) / iters)
+            best[name] = min(
+                best[name], obs_trace.time_block(f, plan, cols, iters=iters)
+            )
     for name, b in best.items():
-        out[f"{name}_us"] = b * 1e6
+        out[f"{name}_us"] = b
     out["speedup"] = out["ideal_us"] / out["calibrated_us"]
     # the deterministic no-recompile pin: a SECOND measured snapshot
     # (same table shapes, different values - what a recalibration or a
@@ -715,21 +683,22 @@ def serve_cold_start(iters: int = 3) -> dict:
         jax.block_until_ready(jax.tree_util.tree_leaves(lowered))
         return lowered
 
-    lower_us = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        lower_once()
-        lower_us = min(lower_us, (time.perf_counter() - t0) * 1e6)
+    lower_us = min(
+        obs_trace.time_block(lower_once, iters=1) for _ in range(iters)
+    )
 
     with tempfile.TemporaryDirectory() as td:
         cache = os.path.join(td, "lm_plan.npz")
         save_plan(cache, lower_once())
-        load_us = float("inf")
-        for _ in range(iters):
-            t0 = time.perf_counter()
+
+        def load_once():
             loaded = load_plan(cache)
             jax.block_until_ready(jax.tree_util.tree_leaves(loaded))
-            load_us = min(load_us, (time.perf_counter() - t0) * 1e6)
+            return loaded
+
+        load_us = min(
+            obs_trace.time_block(load_once, iters=1) for _ in range(iters)
+        )
         cache_bytes = os.path.getsize(cache)
 
     return {
@@ -755,15 +724,11 @@ def emulation_throughput() -> dict:
     cfg = AnalogConfig(noise=NOISELESS)
     f = jax.jit(lambda a, w: analog_matmul(a, w, 0.02, None, None, cfg))
     f(a, w).block_until_ready()
-    t0 = time.perf_counter()
-    iters = 20
-    for _ in range(iters):
-        f(a, w).block_until_ready()
-    dt = (time.perf_counter() - t0) / iters
+    us = obs_trace.time_block(f, a, w, iters=20)
     return {
         "shape": f"{m}x{k}x{n}",
-        "us_per_call": dt * 1e6,
-        "emulated_GOp/s": 2 * m * k * n / dt / 1e9,
+        "us_per_call": us,
+        "emulated_GOp/s": 2 * m * k * n / (us / 1e6) / 1e9,
     }
 
 

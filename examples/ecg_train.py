@@ -18,6 +18,7 @@ Paper reference points: detection (93.7 +- 0.7)% @ (14.0 +- 1.0)% FP,
 import argparse
 
 from benchmarks.ecg_accuracy import run
+from repro import obs
 from repro.core.energy import LayerWork, SystemModel, battery_lifetime_years
 from repro.models.ecg import ECGConfig
 
@@ -38,28 +39,54 @@ def main(argv=None):
         kw["n_train"] = a.n_train
     if a.n_test:
         kw["n_test"] = a.n_test
-    print("=== HIL training on the analog backend (mock-mode noise) ===")
-    r = run(mode="analog_faithful", **kw)
-    print(f"\nanalog HIL: detection {r['detection_rate']*100:.1f}% @ "
-          f"{r['false_positive_rate']*100:.1f}% FP  "
-          f"[paper: 93.7% @ 14.0%]  ({r['train_s']:.0f}s)")
+    with obs.collect("ecg-train") as tr:
+        print("=== HIL training on the analog backend (mock-mode noise) "
+              "===")
+        with obs.span("ecg.train.analog"):
+            r = run(mode="analog_faithful", **kw)
+        print(f"\nanalog HIL: detection {r['detection_rate']*100:.1f}% @ "
+              f"{r['false_positive_rate']*100:.1f}% FP  "
+              f"[paper: 93.7% @ 14.0%]  ({r['train_s']:.0f}s)")
 
-    print("\n=== digital software baseline (same data/model) ===")
-    rd = run(mode="digital", verbose=False, **kw)
-    print(f"digital:   detection {rd['detection_rate']*100:.1f}% @ "
-          f"{rd['false_positive_rate']*100:.1f}% FP")
+        print("\n=== digital software baseline (same data/model) ===")
+        with obs.span("ecg.train.digital"):
+            rd = run(mode="digital", verbose=False, **kw)
+        print(f"digital:   detection {rd['detection_rate']*100:.1f}% @ "
+              f"{rd['false_positive_rate']*100:.1f}% FP")
 
-    print("\n=== deployment cost on the BSS-2 mobile system ===")
-    ecg = ECGConfig()
-    m = SystemModel()
-    rep = m.report([LayerWork(k=lw.k, n=lw.n) for lw in ecg.layer_works()])
-    print(f"per inference: {rep['time_s']*1e6:.0f} us, "
-          f"{rep['energy_total_j']*1e3:.2f} mJ total "
-          f"({rep['energy_asic_j']*1e6:.0f} uJ on-ASIC)  "
-          f"[paper: 276 us, 1.56 mJ, 192 uJ]")
-    print(f"CR2032 @ 2-min monitoring interval: "
-          f"{battery_lifetime_years(rep['energy_total_j']):.1f} years "
-          f"[paper: ~5 years]")
+        print("\n=== deployment cost on the BSS-2 mobile system ===")
+        ecg = ECGConfig()
+        m = SystemModel()
+        rep = m.report([LayerWork(k=lw.k, n=lw.n)
+                        for lw in ecg.layer_works()])
+        print(f"per inference: {rep['time_s']*1e6:.0f} us, "
+              f"{rep['energy_total_j']*1e3:.2f} mJ total "
+              f"({rep['energy_asic_j']*1e6:.0f} uJ on-ASIC)  "
+              f"[paper: 276 us, 1.56 mJ, 192 uJ]")
+        print(f"CR2032 @ 2-min monitoring interval: "
+              f"{battery_lifetime_years(rep['energy_total_j']):.1f} years "
+              f"[paper: ~5 years]")
+
+        # end-of-run obs report: the SAME accounting, but derived from
+        # the compiled plan of the trained weights (paper §II-A
+        # standalone inference: the code-domain single program) rather
+        # than from config geometry
+        from repro import api
+        from repro.core.analog import AnalogConfig
+        from repro.models.ecg import ecg_module_spec
+
+        plan = api.compile(
+            ecg_module_spec(ecg, epilogue="relu_shift"), r["params"],
+            AnalogConfig(mode="analog_fast"),
+        ).lower()
+        erep = obs.energy.record(plan, prefix="ecg.energy")
+
+    print("\n=== end-of-run obs report (trained plan) ===")
+    print(obs.energy.format_report(erep, title="ecg"))
+    print()
+    print(obs.report.render(
+        obs.report.records_of(tr, obs.metrics.registry())
+    ))
 
 
 if __name__ == "__main__":

@@ -14,11 +14,10 @@ shard by the same logical axes as the weights they were baked from.
 """
 import argparse
 import contextlib
-import time
 
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.configs.base import RunConfig
 from repro.core.analog import AnalogConfig
 from repro.distributed import sharding as shd
@@ -60,12 +59,13 @@ def main(argv=None):
                 max_new_tokens=a.max_new)
         for i in range(a.requests)
     ]
-    with mesh_ctx:
+    obs.reset_metrics()
+    with obs.collect("serve-batch") as tr, mesh_ctx:
         engine = ServeEngine(cfg, run, params, batch_size=a.batch,
                              max_len=128)
-        t0 = time.time()
-        done = engine.serve(reqs)
-        dt = time.time() - t0
+        with obs.span("serve.all") as sp:
+            done = engine.serve(reqs)
+        dt = sp.dur_us / 1e6
     total_new = sum(len(r.output) for r in done)
     print(f"arch={a.arch} mode={a.mode}: served {len(done)} requests, "
           f"{total_new} tokens in {dt:.1f}s "
@@ -73,6 +73,10 @@ def main(argv=None):
     for r in done[:4]:
         print(f"  req {r.uid}: prompt[:6]={r.prompt[:6].tolist()} -> "
               f"out[:8]={r.output[:8].tolist()}")
+    print("\n=== end-of-run obs report ===")
+    print(obs.report.render(
+        obs.report.records_of(tr, obs.metrics.registry())
+    ))
 
 
 if __name__ == "__main__":

@@ -554,33 +554,45 @@ def compile(spec: ModuleSpec, params, run_cfg, *,  # noqa: A001
     set (drift-swap, sharding coverage) is
     :meth:`CompiledModel.verify`.
     """
-    acfg = _acfg(run_cfg)
-    if spec.kind == STACK:
-        lowered = None if acfg.mode == "digital" else _compile_stack(
-            spec, params, acfg, calibration
-        )
-    elif spec.kind == TREE:
-        lowered = lower_tree(params, acfg, calibration=calibration,
-                             groups=spec.groups)
-    elif spec.kind == BLOCK:
-        if acfg.mode == "digital":
-            raise ValueError(
-                f"spec {spec.name!r}: digital mode compiles no analog "
-                "block megakernel; run the transformer model path "
-                "instead (models.transformer)"
-            )
-        lowered = _compile_block(spec, params, acfg, calibration)
-    else:
-        raise ValueError(f"unknown spec kind {spec.kind!r}")
-    if verify:
-        from repro.verify import invariants as _inv
+    from repro.exec.lower import lowering_count
+    from repro.obs import trace as _trace
 
-        _inv.check(_inv.verify_spec(spec))
-        if lowered is not None:
-            _inv.check(_inv.verify_plan(
-                lowered, spec=spec, calibration=calibration,
-                cheap_only=True,
-            ))
+    acfg = _acfg(run_cfg)
+    with _trace.span("api.compile", spec=spec.name, kind=spec.kind,
+                     mode=acfg.mode) as _sp:
+        lowerings_before = lowering_count()
+        if spec.kind == STACK:
+            lowered = None if acfg.mode == "digital" else _compile_stack(
+                spec, params, acfg, calibration
+            )
+        elif spec.kind == TREE:
+            lowered = lower_tree(params, acfg, calibration=calibration,
+                                 groups=spec.groups)
+        elif spec.kind == BLOCK:
+            if acfg.mode == "digital":
+                raise ValueError(
+                    f"spec {spec.name!r}: digital mode compiles no analog "
+                    "block megakernel; run the transformer model path "
+                    "instead (models.transformer)"
+                )
+            lowered = _compile_block(spec, params, acfg, calibration)
+        else:
+            raise ValueError(f"unknown spec kind {spec.kind!r}")
+        _sp.add(lowerings=lowering_count() - lowerings_before)
+        if verify:
+            from repro.verify import invariants as _inv
+
+            diags = _inv.verify_spec(spec)
+            if lowered is not None:
+                diags = diags + _inv.verify_plan(
+                    lowered, spec=spec, calibration=calibration,
+                    cheap_only=True,
+                )
+            for d in diags:
+                _trace.event("verify.diagnostic", rule=d.rule,
+                             path=d.path, message=d.message)
+            _sp.add(diagnostics=len(diags))
+            _inv.check(diags)
     return CompiledModel(spec=spec, params=params, run_cfg=run_cfg,
                          lowered=lowered, calibration=calibration)
 

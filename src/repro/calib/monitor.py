@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from repro.calib.device import VirtualChip
 from repro.calib.routines import null_offsets
 from repro.calib.snapshot import CalibrationSnapshot
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 
 class DriftMonitor:
@@ -80,11 +82,14 @@ class DriftMonitor:
         """Re-null every layer's offsets (full averaging depth) and
         return the refreshed snapshot (gains/scales untouched).  The
         refreshed snapshot becomes the monitor's new reference."""
-        self.snapshot = self.snapshot.with_offsets({
-            name: null_offsets(chip, repeats=self.refresh_repeats)
-            for name, chip in self.chips.items()
-        })
+        with _trace.span("drift.refresh", layers=len(self.chips)):
+            self.snapshot = self.snapshot.with_offsets({
+                name: null_offsets(chip, repeats=self.refresh_repeats)
+                for name, chip in self.chips.items()
+            })
         self.refreshes += 1
+        _metrics.counter("drift.hot_swap").inc()
+        _trace.event("drift.hot_swap", refreshes=self.refreshes)
         return self.snapshot
 
     def maybe_refresh(self) -> Optional[CalibrationSnapshot]:
@@ -94,6 +99,10 @@ class DriftMonitor:
         self._calls += 1
         if self._calls % self.every:
             return None
-        if self.drift_lsb() <= self.threshold_lsb:
+        lsb = self.drift_lsb()
+        _metrics.histogram("drift.lsb").record(lsb)
+        _trace.event("drift.probe", lsb=round(lsb, 4),
+                     threshold_lsb=self.threshold_lsb)
+        if lsb <= self.threshold_lsb:
             return None
         return self.refresh()

@@ -51,6 +51,7 @@ from repro.exec.plan import (
     GroupPlan,
     LayerPlan,
 )
+from repro.obs import metrics as _obs_metrics
 
 ANALOG_DISPATCHES = 0
 
@@ -75,8 +76,11 @@ def dispatch_count() -> int:
 
 
 def _count(n: int = 1) -> None:
+    # Host-side, trace-time only (like ANALOG_DISPATCHES itself): a
+    # cached-jit replay bumps neither the module counter nor the metric.
     global ANALOG_DISPATCHES
     ANALOG_DISPATCHES += n
+    _obs_metrics.counter("exec.dispatches").inc(n)
 
 
 def _pad_codes(a: jax.Array, k_pad: int) -> jax.Array:
@@ -524,7 +528,9 @@ def _run_block(
     if reason is not None:
         if megakernel is True:
             raise ValueError(f"megakernel=True, but: {reason}")
+        _obs_metrics.counter("exec.run.per_layer").inc()
         return _run_block_fallback(plan, x, key)
+    _obs_metrics.counter("exec.run.megakernel").inc()
     b, s, d = x.shape
     _count()
     y = kernel_ops.analog_plan_codes(
@@ -575,9 +581,11 @@ def run(
         route = _megakernel_route(plan, x, cfg, key, x_is_codes,
                                   forced=megakernel is True)
         if not isinstance(route, str):
+            _obs_metrics.counter("exec.run.megakernel").inc()
             return _run_megakernel(plan, x, route)
         if megakernel is True:
             raise ValueError(f"megakernel=True, but: {route}")
+    _obs_metrics.counter("exec.run.per_layer").inc()
     ks = list(jax.random.split(key, n)) if key is not None else [None] * n
     is_codes = x_is_codes
     h = x

@@ -32,6 +32,7 @@ from repro.core.noise import NoiseConfig
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as T
+from repro.obs import trace as obs_trace
 from repro.serve import serve_step as SS
 from repro.train import train_step as TS
 
@@ -265,22 +266,21 @@ def main():
             try:
                 r = run_cell(arch, shape, mesh_kind, args.mode, args.out,
                              tag=args.tag, signed=args.signed, **overrides)
-                print(
+                obs_trace.log(
                     f"[OK] {tag}: compile={r['compile_s']}s "
                     f"args/dev={r['memory']['argument_size_in_bytes']/2**30:.2f}GiB "
                     f"temp/dev={r['memory']['temp_size_in_bytes']/2**30:.2f}GiB "
                     f"flops={r['cost'].get('flops')} "
                     f"coll={r['collectives']['total_bytes']:.3g}B",
-                    flush=True,
                 )
             except Exception as e:  # noqa: BLE001
                 failures.append(tag)
-                print(f"[FAIL] {tag}: {e}", flush=True)
+                obs_trace.log(f"[FAIL] {tag}: {e}")
                 traceback.print_exc()
     if failures:
-        print(f"\n{len(failures)} FAILURES:\n" + "\n".join(failures))
+        obs_trace.log(f"\n{len(failures)} FAILURES:\n" + "\n".join(failures))
         raise SystemExit(1)
-    print("\nall cells compiled")
+    obs_trace.log("\nall cells compiled")
 
 
 if __name__ == "__main__":

@@ -12,7 +12,6 @@ on one CPU host with the smoke configs (tested in tests/test_launch.py).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +22,7 @@ from repro.data.lm_data import DataConfig, SyntheticLM
 from repro.distributed import sharding as shd
 from repro.distributed.fault import Heartbeat, RetryPolicy, StragglerClock
 from repro.launch.mesh import make_host_mesh
+from repro.obs import trace as obs_trace
 from repro.train import checkpoint as CKPT
 from repro.train import train_step as TS
 
@@ -59,7 +59,7 @@ def train_loop(arch: str, *, smoke: bool = True, steps: int = 50,
             if restored is not None:
                 params, opt, start_step, _ = restored
                 state = {"params": params, "opt": opt}
-                print(f"resumed from step {start_step}")
+                obs_trace.log(f"resumed from step {start_step}")
 
         hb = Heartbeat(ckpt_dir + "/hb", jax.process_index()) if ckpt_dir \
             else None
@@ -77,23 +77,23 @@ def train_loop(arch: str, *, smoke: bool = True, steps: int = 50,
                                jax.random.PRNGKey(step))
 
             def rollback(attempt, exc, step=step):
-                print(f"step {step} failed ({exc}); rolling back "
-                      f"(attempt {attempt + 1})")
+                obs_trace.log(f"step {step} failed ({exc}); rolling back "
+                              f"(attempt {attempt + 1})")
 
-            t0 = time.perf_counter()
-            state, metrics = retry.run(do_step, on_failure=rollback)
-            dt = time.perf_counter() - t0
+            with obs_trace.span("train.step", step=step) as sp:
+                state, metrics = retry.run(do_step, on_failure=rollback)
+            dt = sp.dur_us / 1e6
             if clock.record(dt):
-                print(f"step {step}: straggler ({dt:.2f}s vs median "
-                      f"{clock.median:.2f}s)")
+                obs_trace.log(f"step {step}: straggler ({dt:.2f}s vs "
+                              f"median {clock.median:.2f}s)")
             losses.append(float(metrics["loss"]))
             if hb is not None:
                 hb.beat(step)
             if log_every and step % log_every == 0:
-                print(f"step {step:5d}: loss={losses[-1]:.4f} "
-                      f"lr={float(metrics['lr']):.2e} "
-                      f"gnorm={float(metrics['grad_norm']):.2f} "
-                      f"({dt*1e3:.0f} ms)")
+                obs_trace.log(f"step {step:5d}: loss={losses[-1]:.4f} "
+                              f"lr={float(metrics['lr']):.2e} "
+                              f"gnorm={float(metrics['grad_norm']):.2f} "
+                              f"({dt*1e3:.0f} ms)")
             if ckpt_dir and (step + 1) % ckpt_every == 0:
                 CKPT.save(ckpt_dir, step + 1, state["params"], state["opt"],
                           extra={"arch": cfg.name, "loss": losses[-1]})
@@ -126,8 +126,8 @@ def main() -> None:
         ckpt_every=a.ckpt_every, batch=a.batch, seq_len=a.seq_len,
         lr=a.lr, mode=a.mode, use_mesh=a.mesh,
     )
-    print(f"final loss: {out['losses'][-1]:.4f} "
-          f"(first: {out['losses'][0]:.4f})")
+    obs_trace.log(f"final loss: {out['losses'][-1]:.4f} "
+                  f"(first: {out['losses'][0]:.4f})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,137 @@
+"""CLI: render obs JSONL runs, or produce one from a tiny serve loop.
+
+    python -m repro.obs run.jsonl              # render a recorded run
+    python -m repro.obs --serve-smoke out.jsonl  # instrumented serve loop
+
+``--serve-smoke`` is the CI observability gate: it boots a tiny analog
+LM through ``ServeEngine`` twice (plan-cache miss then hit), serves
+batches across a forced drift episode, dumps the combined trace+metrics
+JSONL and FAILS (exit 1) if any required span/event/counter/histogram is
+missing from the run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+
+from . import report
+
+# The telemetry contract of an instrumented serve run (ISSUE 9
+# acceptance).  CI fails if any of these is absent.
+REQUIRED_SPANS = (
+    "serve.compile",
+    "serve.compile/api.compile",
+    "serve.batch",
+    "serve.batch/serve.prefill",
+    "serve.batch/serve.decode",
+)
+REQUIRED_EVENTS = (
+    "serve.plan_cache",
+    "serve.refill",
+    "serve.energy",
+    "drift.probe",
+    "drift.hot_swap",
+)
+REQUIRED_COUNTERS = (
+    "exec.dispatches",
+    "serve.plan_cache.hit",
+    "serve.plan_cache.miss",
+    "serve.hot_swap",
+    "drift.hot_swap",
+)
+REQUIRED_HISTOGRAMS = (
+    "serve.queue_us",
+    "serve.prefill_us",
+    "serve.decode_us",
+    "serve.batch_occupancy",
+    "drift.lsb",
+)
+
+
+def serve_smoke(out_path: str) -> int:
+    """Run the tiny instrumented serve loop and gate on the contract."""
+    import jax
+    import numpy as np
+
+    from repro import calib, obs
+    from repro.configs.base import ArchConfig, RunConfig
+    from repro.core.analog import AnalogConfig
+    from repro.models import transformer as T
+    from repro.serve.engine import Request, ServeEngine
+
+    key = jax.random.PRNGKey(0)
+    cfg = ArchConfig("obs-smoke", "dense", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256)
+    params = T.lm_init(key, cfg)
+    run_cfg = RunConfig(analog=AnalogConfig(mode="analog_fast"))
+    spec = T.lm_module_spec(cfg, params)
+    chips = calib.model_chips(spec, params, key)
+    snap = calib.calibrate_model(spec, params, key, chips=chips,
+                                 offset_repeats=16, gain_repeats=2)
+    mon = calib.DriftMonitor(chips, snap, threshold_lsb=0.5)
+
+    obs.reset_metrics()
+    prompt = np.arange(6) % cfg.vocab_size
+    with tempfile.TemporaryDirectory() as td:
+        cache = os.path.join(td, "plan.npz")
+        with obs.collect("serve-smoke") as tr:
+            eng = ServeEngine(cfg, run_cfg, params, batch_size=2,
+                              max_len=32, calibration=snap,
+                              drift_monitor=mon, plan_cache=cache)
+            eng.serve([Request(i, prompt, 4) for i in range(3)])
+            for i, c in enumerate(chips.values()):
+                c.apply_drift(jax.random.fold_in(key, 70 + i), 2.0)
+            eng.serve([Request(3, prompt, 4)])
+            # warm boot: the packed plan on disk is the executable
+            ServeEngine(cfg, run_cfg, params, batch_size=2, max_len=32,
+                        calibration=mon.snapshot, plan_cache=cache)
+
+    records = report.records_of(tr, obs.registry())
+    report.dump_run(out_path, tr, obs.registry())
+    print(report.render(records))
+    print(f"\nwrote {out_path} ({len(records)} records)")
+
+    missing = report.required_missing(
+        records, span_paths=REQUIRED_SPANS, events=REQUIRED_EVENTS,
+        counters=REQUIRED_COUNTERS, histograms=REQUIRED_HISTOGRAMS,
+    )
+    statuses = {r["meta"].get("status") for r in records
+                if r.get("rec") == "event" and r["name"] == "serve.plan_cache"}
+    for want in ("miss", "hit"):
+        if want not in statuses:
+            missing.append(f"event:serve.plan_cache[status={want}]")
+    hot_swaps = [r for r in records if r.get("rec") == "event"
+                 and r["name"] == "drift.hot_swap"]
+    if len(hot_swaps) != 1:
+        missing.append(f"event:drift.hot_swap (want exactly 1, got "
+                       f"{len(hot_swaps)})")
+    if missing:
+        print("MISSING telemetry:\n  " + "\n  ".join(missing))
+        return 1
+    print("serve-smoke telemetry contract: OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="render obs JSONL runs / run the instrumented "
+                    "serve smoke")
+    ap.add_argument("jsonl", nargs="?", help="run file to render")
+    ap.add_argument("--serve-smoke", metavar="OUT",
+                    help="run a tiny instrumented serve loop, write its "
+                         "JSONL to OUT and gate on required telemetry")
+    args = ap.parse_args(argv)
+    if args.serve_smoke:
+        return serve_smoke(args.serve_smoke)
+    if not args.jsonl:
+        ap.error("nothing to do: pass a JSONL file or --serve-smoke OUT")
+    print(report.render(report.load(args.jsonl)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

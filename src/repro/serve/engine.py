@@ -18,6 +18,9 @@ from repro import api
 from repro.configs.base import ArchConfig, RunConfig
 from repro.distributed import sharding as shd
 from repro.models import transformer as T
+from repro.obs import energy as obs_energy
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.serve_step import make_serve_steps
 
 
@@ -29,6 +32,8 @@ class Request:
     eos_id: Optional[int] = None
     # filled by the engine:
     output: Optional[np.ndarray] = None
+    # stamped by serve() on admission; feeds the serve.queue_us histogram
+    t_enqueue_us: Optional[float] = None
 
 
 class ServeEngine:
@@ -72,23 +77,35 @@ class ServeEngine:
         self.drift_monitor = drift_monitor
         step_kw = {}
         if prelower and run.analog.mode != "digital":
-            if plan_cache is not None and os.path.exists(plan_cache):
-                from repro.exec.store import load_plan
+            with obs_trace.span("serve.compile", model=cfg.name) as _sp:
+                if plan_cache is not None and os.path.exists(plan_cache):
+                    from repro.exec.store import load_plan
 
-                self.model = api.CompiledModel(
-                    spec=T.lm_module_spec(cfg, params), params=params,
-                    run_cfg=run, lowered=load_plan(plan_cache),
-                    calibration=calibration,
-                )
-            else:
-                self.model = api.compile(
-                    T.lm_module_spec(cfg, params), params, run,
-                    calibration=calibration,
-                )
-                if plan_cache is not None:
-                    from repro.exec.store import save_plan
+                    obs_metrics.counter("serve.plan_cache.hit").inc()
+                    obs_trace.event("serve.plan_cache", status="hit",
+                                    path=plan_cache)
+                    self.model = api.CompiledModel(
+                        spec=T.lm_module_spec(cfg, params), params=params,
+                        run_cfg=run, lowered=load_plan(plan_cache),
+                        calibration=calibration,
+                    )
+                    _sp.add(route="plan_cache")
+                else:
+                    if plan_cache is not None:
+                        obs_metrics.counter("serve.plan_cache.miss").inc()
+                        obs_trace.event("serve.plan_cache", status="miss",
+                                        path=plan_cache)
+                    self.model = api.compile(
+                        T.lm_module_spec(cfg, params), params, run,
+                        calibration=calibration,
+                    )
+                    if plan_cache is not None:
+                        from repro.exec.store import save_plan
 
-                    save_plan(plan_cache, self.model.lower())
+                        save_plan(plan_cache, self.model.lower())
+                    _sp.add(route="lower")
+                # static per-inference cost of the plans this engine serves
+                obs_energy.record(self.model, prefix="serve.energy")
             params = self.model.lower()
             if shd.get_mesh() is not None:
                 # plan leaves shard by the same logical axes as the
@@ -120,56 +137,104 @@ class ServeEngine:
         snapshot = self.drift_monitor.maybe_refresh()
         if snapshot is None:
             return False
-        self.model = self.model.with_calibration(snapshot)
-        swapped = self.model.lower()
-        if shd.get_mesh() is not None:
-            swapped = jax.device_put(
-                swapped,
-                shd.sharding_like(self.model.sharding_specs(), swapped),
-            )
-        self.params = swapped
+        with obs_trace.span("serve.hot_swap"):
+            self.model = self.model.with_calibration(snapshot)
+            swapped = self.model.lower()
+            if shd.get_mesh() is not None:
+                swapped = jax.device_put(
+                    swapped,
+                    shd.sharding_like(self.model.sharding_specs(), swapped),
+                )
+            self.params = swapped
+        obs_metrics.counter("serve.hot_swap").inc()
         return True
 
     def run_batch(self, requests: list[Request]) -> list[Request]:
-        """Serve one group of <= batch_size requests to completion."""
+        """Serve one group of <= batch_size requests to completion.
+
+        Telemetry (repro.obs, host-side only - the jitted steps are
+        untouched): a ``serve.batch`` span nests ``serve.prefill`` and
+        ``serve.decode`` spans; histograms ``serve.queue_us`` (admission
+        -> batch start), ``serve.prefill_us``, ``serve.decode_us`` (per
+        step), ``serve.request_us`` (admission -> completion) and
+        ``serve.batch_occupancy`` (filled fraction of decode slots).
+        The per-step decode sync replaces the host sync the following
+        ``int(next_tok[i])`` read would force anyway.
+        """
         assert len(requests) <= self.batch_size
         self.maybe_recalibrate()
         b = len(requests)
-        prompt_len = max(len(r.prompt) for r in requests)
-        toks = np.zeros((b, prompt_len), np.int32)
-        for i, r in enumerate(requests):
-            toks[i, prompt_len - len(r.prompt):] = r.prompt  # left-pad
-        cache = T.init_lm_cache(self.cfg, b, self.max_len,
-                                dtype=jnp.float32)
-        logits, cache = self.prefill(
-            self.params, {"tokens": jnp.asarray(toks)}, cache
+        t_start = obs_trace.clock_us()
+        for r in requests:
+            if r.t_enqueue_us is not None:
+                obs_metrics.histogram("serve.queue_us").record(
+                    t_start - r.t_enqueue_us
+                )
+        obs_metrics.histogram("serve.batch_occupancy").record(
+            b / self.batch_size
         )
-        max_new = max(r.max_new_tokens for r in requests)
-        outs = [[] for _ in range(b)]
-        done = np.zeros(b, bool)
-        next_tok = self._sample(logits)
-        for _ in range(max_new):
+        prompt_len = max(len(r.prompt) for r in requests)
+        with obs_trace.span("serve.batch", batch=b,
+                            prompt_len=prompt_len) as _bsp:
+            toks = np.zeros((b, prompt_len), np.int32)
             for i, r in enumerate(requests):
-                if not done[i]:
-                    tok = int(next_tok[i])
-                    outs[i].append(tok)
-                    if (r.eos_id is not None and tok == r.eos_id) or len(
-                        outs[i]
-                    ) >= r.max_new_tokens:
-                        done[i] = True
-            if done.all():
-                break
-            logits, cache = self.decode(
-                self.params, next_tok[:, None], cache
-            )
-            next_tok = self._sample(logits)
+                toks[i, prompt_len - len(r.prompt):] = r.prompt  # left-pad
+            cache = T.init_lm_cache(self.cfg, b, self.max_len,
+                                    dtype=jnp.float32)
+            with obs_trace.span("serve.prefill", batch=b,
+                                prompt_len=prompt_len) as psp:
+                logits, cache = self.prefill(
+                    self.params, {"tokens": jnp.asarray(toks)}, cache
+                )
+                next_tok = jax.block_until_ready(self._sample(logits))
+            obs_metrics.histogram("serve.prefill_us").record(psp.dur_us)
+            max_new = max(r.max_new_tokens for r in requests)
+            outs = [[] for _ in range(b)]
+            done = np.zeros(b, bool)
+            steps = 0
+            with obs_trace.span("serve.decode", batch=b) as dsp:
+                for _ in range(max_new):
+                    for i, r in enumerate(requests):
+                        if not done[i]:
+                            tok = int(next_tok[i])
+                            outs[i].append(tok)
+                            if (r.eos_id is not None and tok == r.eos_id
+                                ) or len(outs[i]) >= r.max_new_tokens:
+                                done[i] = True
+                                obs_metrics.histogram(
+                                    "serve.request_us"
+                                ).record(obs_trace.clock_us() - (
+                                    r.t_enqueue_us
+                                    if r.t_enqueue_us is not None
+                                    else t_start
+                                ))
+                    if done.all():
+                        break
+                    t_step = obs_trace.clock_us()
+                    logits, cache = self.decode(
+                        self.params, next_tok[:, None], cache
+                    )
+                    next_tok = jax.block_until_ready(self._sample(logits))
+                    obs_metrics.histogram("serve.decode_us").record(
+                        obs_trace.clock_us() - t_step
+                    )
+                    steps += 1
+                dsp.add(steps=steps)
+            _bsp.add(tokens=int(sum(len(o) for o in outs)))
         for i, r in enumerate(requests):
             r.output = np.asarray(outs[i], np.int32)
         return requests
 
     def serve(self, requests: list[Request]) -> list[Request]:
         """Serve an arbitrary number of requests in batched groups."""
+        now = obs_trace.clock_us()
+        for r in requests:
+            if r.t_enqueue_us is None:
+                r.t_enqueue_us = now
         out = []
         for i in range(0, len(requests), self.batch_size):
-            out.extend(self.run_batch(requests[i : i + self.batch_size]))
+            group = requests[i : i + self.batch_size]
+            obs_trace.event("serve.refill", group=i // self.batch_size,
+                            size=len(group))
+            out.extend(self.run_batch(group))
         return out

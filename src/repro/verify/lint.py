@@ -2,7 +2,7 @@
 SOURCE level.
 
 The plan rules in :mod:`repro.verify.invariants` check artifacts after
-lowering; this module checks the code that produces them.  Five rules:
+lowering; this module checks the code that produces them.  Seven rules:
 
 ``fpn-access``
     ``params["fpn"]`` / ``params.get("fpn")`` may be READ only by
@@ -36,6 +36,19 @@ lowering; this module checks the code that produces them.  Five rules:
     (``exec/lower.py``), the plan definitions (``exec/plan.py``) and
     the plan store (``exec/store.py``) would reintroduce a baked fp32
     weight copy that drift hot-swaps and the plan cache cannot see.
+
+``bare-print``
+    ``print(`` in ``src/repro`` outside ``repro/obs/``: library code
+    reports through :func:`repro.obs.trace.log` (which also records an
+    event when a trace is collecting) so output is observable, not lost
+    on stdout.  ``__main__.py`` CLI entry points are exempt - their
+    stdout IS the interface.
+
+``raw-timer``
+    ``time.perf_counter(`` in ``src/repro`` outside ``repro/obs/``:
+    timing goes through ``obs.trace`` (``span``/``timeit``/``clock_us``)
+    so every measurement shares one implementation and lands in the
+    telemetry stream.
 
 Suppress a finding with a trailing ``# verify: allow-<rule>`` comment on
 the offending line.  Tests are exempt (they exercise the forbidden
@@ -73,6 +86,8 @@ _STORE_HOMES = (
     "repro/exec/store.py",
 )
 DEFAULT_ROOTS = ("src", "benchmarks", "examples")
+# the observability surface: the one place prints and raw timers live
+_OBS_DIR = "repro/obs/"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +129,15 @@ class _FileLint(ast.NodeVisitor):
         )
         self.shim_home = self.relpath.endswith(_SHIM_HOMES)
         self.store_home = self.relpath.endswith(_STORE_HOMES)
+        # bare-print / raw-timer apply to library code in src/repro only
+        # (benchmarks/examples are user-facing scripts), never inside the
+        # observability surface itself
+        in_repro = (
+            "src/repro/" in self.relpath
+            or self.relpath.startswith("repro/")
+        )
+        self.obs_scoped = in_repro and _OBS_DIR not in self.relpath
+        self.cli_main = self.relpath.endswith("__main__.py")
 
     def _emit(self, rule: str, node: ast.AST, message: str) -> None:
         line = getattr(node, "lineno", 1)
@@ -165,6 +189,25 @@ class _FileLint(ast.NodeVisitor):
             )
         if name == "register_dataclass":
             self.registered.append(node)
+        if self.obs_scoped:
+            if (
+                name == "print"
+                and isinstance(node.func, ast.Name)
+                and not self.cli_main
+            ):
+                self._emit(
+                    "bare-print", node,
+                    "bare print() in src/repro: report through "
+                    "repro.obs.trace.log() so the line is also recorded "
+                    "as a trace event",
+                )
+            if name == "perf_counter":
+                self._emit(
+                    "raw-timer", node,
+                    "raw time.perf_counter() in src/repro: time through "
+                    "repro.obs.trace (span/timeit/clock_us) so all "
+                    "measurements share one implementation",
+                )
         if not self.store_home:
             if name == "WeightStore":
                 self._emit(
