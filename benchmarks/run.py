@@ -13,8 +13,9 @@ report.  ``PYTHONPATH=src python -m benchmarks.run [--full | --smoke]``
 transformer-block plan-vs-percall throughputs + the megakernel-vs-
 per-layer code-domain chain + the fused attention+MLP block megakernel
 + the rwkv batch_concat and moe expert_stack fusion-group speedups +
-the calibrated-snapshot-vs-ideal-bake replay) and writes the numbers
-to BENCH_smoke.json.
+the calibrated-snapshot-vs-ideal-bake replay + the fleet vmapped
+calibration and remap hot-swap gates) and writes the numbers to
+BENCH_smoke.json.
 
 ``--full`` additionally trains the ECG CDNN through BOTH inter-layer
 chains (float glue vs code-domain relu_shift) and evaluates each on
@@ -129,6 +130,17 @@ def smoke() -> None:
     print(f"{cs['shape']}: lower {cs['lower_us']/1e3:.0f}ms, "
           f"cache load {cs['load_us']/1e3:.0f}ms "
           f"({cs['speedup']:.2f}x, {cs['cache_bytes']/1024:.0f}KiB)")
+    fc = throughput.fleet_calibration_throughput()
+    print("\n== fleet calibration: vmapped vs per-chip loop ==")
+    print(f"{fc['shape']}: sequential {fc['sequential_us']/1e3:.0f}ms, "
+          f"vmapped {fc['vmapped_us']/1e3:.0f}ms "
+          f"({fc['speedup']:.2f}x)")
+    fr = throughput.fleet_remap_throughput()
+    print("\n== fleet remap: hot-swap vs full re-lower ==")
+    print(f"{fr['shape']}: {fr['moved_chunks']} chunk(s) moved, "
+          f"remap {fr['remap_us']/1e3:.0f}ms; hot-swap "
+          f"{fr['hot_swap_us']/1e3:.1f}ms vs full re-lower "
+          f"{fr['full_relower_us']/1e3:.1f}ms ({fr['speedup']:.2f}x)")
     cal = throughput.calibrated_vs_ideal_replay(iters=5)
     print("\n== calibrated-snapshot vs ideal-bake plan replay ==")
     print(f"{cal['shape']}: ideal {cal['ideal_us']:.0f}us, "
@@ -152,6 +164,7 @@ def smoke() -> None:
            "megakernel": mk, "attention_block_megakernel": ab,
            "rwkv_fused_vs_solo": rw,
            "moe_prelowered_vs_percall": mo, "calibrated_replay": cal,
+           "fleet_calibration": fc, "fleet_remap": fr,
            "plan_bytes": pb, "serve_cold_start": cs,
            "wall_s": (obs_trace.clock_us() - tr.t0_us) / 1e6}
     with open("BENCH_smoke.json", "w") as f:
@@ -180,7 +193,9 @@ def smoke() -> None:
               "megakernel.ecg": (mk["ecg"]["speedup"], 0.85),
               "attention_block_megakernel": (ab["speedup"], 1.0),
               "rwkv_fused_vs_solo": (rw["speedup"], 0.85),
-              "moe_prelowered_vs_percall": (mo["speedup"], 1.0)}
+              "moe_prelowered_vs_percall": (mo["speedup"], 1.0),
+              "fleet_calibration": (fc["speedup"], 1.0),
+              "fleet_remap": (fr["speedup"], 1.0)}
     # shared runners jitter small-shape timings by +-20%, and a full-suite
     # run perturbs whatever entry follows a heavy one.  A single transient
     # dip is NOT a regression: re-measure a failing entry (alone, up to
@@ -212,6 +227,10 @@ def smoke() -> None:
         "moe_prelowered_vs_percall":
             lambda: throughput.moe_prelowered_vs_percall(
                 iters=5)["speedup"],
+        "fleet_calibration":
+            lambda: throughput.fleet_calibration_throughput()["speedup"],
+        "fleet_remap":
+            lambda: throughput.fleet_remap_throughput()["speedup"],
     }
     for k, (got, floor) in floors.items():
         for attempt in range(2):

@@ -710,6 +710,136 @@ def serve_cold_start(iters: int = 3) -> dict:
     }
 
 
+def fleet_calibration_throughput(iters: int = 3) -> dict:
+    """Vmapped fleet calibration vs the per-chip Python loop (ISSUE 10).
+
+    The SAME blind measure->fit pipeline over an 8-chip fleet, two ways:
+
+    - ``sequential``: ``calibrate_chip`` per device - one Python loop,
+      every probe a separate measurement dispatch,
+    - ``vmapped``: ``fleet.calibrate_fleet`` - one measurement per
+      calibration step, all chips answering through a single
+      ``jax.vmap`` over their stacked hidden state.
+
+    Both produce bit-identical tables on fresh same-key fleets (pinned
+    in tests); CI gates the vmapped speedup >= 1.0x.
+    """
+    import jax
+
+    from repro.calib.routines import calibrate_chip
+    from repro.core.noise import NOISELESS
+    from repro.fleet import ChipFleet, calibrate_fleet
+
+    n_chips, slots, rows, cols = 8, 2, 64, 128
+    kw = dict(offset_repeats=8, gain_repeats=2)
+
+    def build():
+        return ChipFleet.build(
+            jax.random.PRNGKey(0), n_chips, slots=slots,
+            chunk_rows=rows, cols=cols, noise=NOISELESS,
+        )
+
+    def vmapped():
+        snap = calibrate_fleet(build(), **kw)
+        jax.block_until_ready((snap.gain_table, snap.chunk_offset))
+
+    def sequential():
+        recs = [calibrate_chip(c, **kw) for c in build().chips]
+        jax.block_until_ready(
+            [(r.gain_table, r.chunk_offset) for r in recs]
+        )
+
+    vmapped(), sequential()                       # warm the jit caches
+    v_us = min(
+        obs_trace.time_block(vmapped, iters=1)
+        for _ in range(iters)
+    )
+    s_us = min(
+        obs_trace.time_block(sequential, iters=1)
+        for _ in range(iters)
+    )
+    return {
+        "shape": f"{n_chips}x[{slots * rows}x{cols}]",
+        "vmapped_us": v_us,
+        "sequential_us": s_us,
+        "speedup": s_us / v_us,
+    }
+
+
+def fleet_remap_throughput(iters: int = 3) -> dict:
+    """Failure-remap hot-swap vs full model re-lower (ISSUE 10).
+
+    The ECG stack placed on a 6-chip fleet; one serving chip dies and
+    its freshly gathered spare tables must reach the served plans.  Two
+    ways through the SAME remapped snapshot:
+
+    - ``hot_swap``: ``CompiledModel.with_calibration`` - value-only leaf
+      swap into the existing plans (treedef untouched, executables
+      reused),
+    - ``full_relower``: ``api.compile(calibration=)`` from scratch -
+      requantize, repack and re-verify every layer.
+
+    Both produce bit-exact serving outputs (pinned in tests); CI gates
+    the hot-swap speedup >= 1.0x.
+    """
+    import jax
+
+    from repro import api
+    from repro.core.analog import AnalogConfig
+    from repro.core.noise import NOISELESS, NoiseConfig
+    from repro.fleet import (
+        ChipFleet, FleetMonitor, calibrate_fleet, model_layer_shapes,
+        model_snapshot, place_model,
+    )
+    from repro.models import ecg as ECG
+
+    cfg = ECG.ECGConfig()
+    params = ECG.ecg_init(jax.random.PRNGKey(0), cfg)
+    spec = ECG.ecg_module_spec(cfg)
+    pl = place_model(model_layer_shapes(spec, params),
+                     n_chips=6, spares=2)
+    fleet = ChipFleet.for_placement(
+        jax.random.PRNGKey(1), pl, noise=NoiseConfig(readout_std=0.0))
+    fsnap = calibrate_fleet(fleet, offset_repeats=8, gain_repeats=2)
+    acfg = AnalogConfig(act_calib="static", signed_input="none",
+                        noise=NOISELESS)
+    model = api.compile(spec, params, acfg,
+                        calibration=model_snapshot(pl, fsnap))
+    dead = pl.assignments[0].chip
+    fleet.kill(dead)
+    mon = FleetMonitor(fleet, pl, fsnap, probe_repeats=4,
+                       spare_offset_repeats=8, spare_gain_repeats=2)
+    with obs_trace.span("bench.fleet_remap") as rsp:
+        snap2 = mon.remap(model, dead).calibration
+    remap_us = rsp.dur_us
+
+    def hot_swap():
+        m = model.with_calibration(snap2)
+        jax.block_until_ready(jax.tree_util.tree_leaves(m.lowered))
+
+    def full_relower():
+        m = api.compile(spec, params, acfg, calibration=snap2)
+        jax.block_until_ready(jax.tree_util.tree_leaves(m.lowered))
+
+    hot_swap(), full_relower()                    # warm the jit caches
+    h_us = min(
+        obs_trace.time_block(hot_swap, iters=1)
+        for _ in range(iters)
+    )
+    f_us = min(
+        obs_trace.time_block(full_relower, iters=1)
+        for _ in range(iters)
+    )
+    return {
+        "shape": "ecg on 6 chips (2 spares)",
+        "remap_us": remap_us,
+        "moved_chunks": len(pl.assignments_on(dead)),
+        "hot_swap_us": h_us,
+        "full_relower_us": f_us,
+        "speedup": f_us / h_us,
+    }
+
+
 def emulation_throughput() -> dict:
     """Host-side emulation speed of the faithful analog matmul (ref path)."""
     import jax

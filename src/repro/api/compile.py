@@ -54,6 +54,7 @@ from repro.exec.lower import (
     lower_fused,
     lower_layer,
     lower_stack,
+    stacked_calib,
 )
 from repro.exec.plan import (
     GROUP_BATCH_CONCAT,
@@ -102,10 +103,17 @@ def _is_analog_layer(node) -> bool:
 
 def _lower_leaf(node: dict, acfg: AnalogConfig, calib=None):
     """Lower one analog layer dict; vmap over a leading scan-stack axis.
-    Measured calibration applies to plain 2-D layers (a scan-stacked
-    layer has no single physical device)."""
+    Measured calibration applies to plain 2-D layers and - when the
+    record carries per-stack-member ``[S, ...]`` tables (one device per
+    scan-stack member, the fleet gather) - to stacked layers via a joint
+    vmap over (params, calibration)."""
     if node["w"].ndim == 3:
-        lp = jax.vmap(lambda p: lower_layer(p, acfg))(node)
+        if stacked_calib(calib, node["w"].shape[0]):
+            lp = jax.vmap(
+                lambda p, c: lower_layer(p, acfg, calib=c)
+            )(node, calib)
+        else:
+            lp = jax.vmap(lambda p: lower_layer(p, acfg))(node)
         # the vmap trace leaves concrete fp32 codes; repack outside it
         return dataclasses.replace(lp, store=lp.store.packed())
     return lower_layer(node, acfg, calib=calib)
@@ -222,9 +230,20 @@ def _lower_group(
         if acfg.act_calib != "dynamic" and not _static_fusable(calibs):
             return None
         if members[0]["w"].ndim == 3:
-            fused = jax.vmap(
-                lambda *ms: lower_fused(list(ms), acfg)
-            )(*members)
+            s = members[0]["w"].shape[0]
+            if calibs is not None and all(
+                stacked_calib(c, s) for c in calibs
+            ):
+                nm = len(members)
+                fused = jax.vmap(
+                    lambda *mc: lower_fused(
+                        list(mc[:nm]), acfg, calibs=list(mc[nm:])
+                    )
+                )(*members, *calibs)
+            else:
+                fused = jax.vmap(
+                    lambda *ms: lower_fused(list(ms), acfg)
+                )(*members)
             fused = dataclasses.replace(
                 fused, store=fused.store.packed()
             )
@@ -598,15 +617,18 @@ def compile(spec: ModuleSpec, params, run_cfg, *,  # noqa: A001
 
 
 def _swap_group(gp: GroupPlan, snapshot, parent: str):
-    """Drift-refresh one GroupPlan: swap the fused plan's offset table
+    """Drift-refresh one GroupPlan: swap the fused plan's measured tables
     when the snapshot covers every member.  column_concat tables
     concatenate along columns, batch_concat tables stack along the member
-    axis; expert_stack plans have no per-member device (nothing measured)
-    and scan-stacked group plans have no single device either - both are
-    returned untouched."""
+    axis (AFTER any scan-stack prefix - per-stack-member ``[S, C, N]``
+    tables swap too); expert_stack plans have no per-member device
+    (nothing measured) and are returned untouched, as is any group whose
+    snapshot tables do not match the fused geometry.  Gain tables swap
+    alongside offsets when the fused plan baked a measured gain leaf
+    (``store.chunk_gain``) and carries no offset-encoding column sum."""
     import jax.numpy as jnp
 
-    from repro.exec.lower import layer_with_offsets
+    from repro.exec.lower import layer_with_tables
 
     if gp.kind == GROUP_EXPERT_STACK or gp.fused.chunk_offset is None:
         return gp
@@ -616,37 +638,49 @@ def _swap_group(gp: GroupPlan, snapshot, parent: str):
     ]
     if any(r is None or r.chunk_offset is None for r in recs):
         return gp
-    tables = [jnp.asarray(r.chunk_offset, jnp.float32) for r in recs]
     if gp.kind == GROUP_COLUMN_CONCAT:
-        off = jnp.concatenate(tables, axis=-1)
+        cat = lambda ts: jnp.concatenate(ts, axis=-1)
     else:
-        off = jnp.stack(tables, axis=0)
+        cat = lambda ts: jnp.stack(ts, axis=-3)
+    off = cat([jnp.asarray(r.chunk_offset, jnp.float32) for r in recs])
     if off.shape != gp.fused.chunk_offset.shape:
-        return gp            # scan-stacked group plans: no single device
+        return gp            # tables from a different device geometry
+    gain = None
+    if (gp.fused.store.chunk_gain is not None
+            and gp.fused.colsum is None
+            and all(r.gain_table is not None for r in recs)):
+        g = cat([jnp.asarray(r.gain_table, jnp.float32) for r in recs])
+        if g.shape == gp.fused.store.chunk_gain.shape:
+            gain = g
     import dataclasses
 
     return dataclasses.replace(
-        gp, fused=layer_with_offsets(gp.fused, off)
+        gp, fused=layer_with_tables(gp.fused, chunk_offset=off,
+                                    chunk_gain=gain)
     )
 
 
 def swap_calibration(lowered, snapshot, *, path: str = ""):
-    """Hot-swap refreshed OFFSET tables into a pre-lowered params tree
-    (the drift-refresh path): every ``"_plan"`` entry and every
-    ``"_groups"`` GroupPlan whose layer(s) the snapshot covers gets its
-    ``chunk_offset`` leaf replaced; weights, gains, scales and all static
-    metadata are kept, so the result has the identical treedef and jitted
-    serve steps keep their compiled executables.  All three group kinds
-    are walked: column_concat and batch_concat swap their members'
-    measured tables in (concatenated / member-stacked); expert_stack
-    groups have no measured device and are kept.  The legacy
+    """Hot-swap refreshed measured tables into a pre-lowered params tree
+    (the drift-refresh and fleet-remap path): every ``"_plan"`` entry and
+    every ``"_groups"`` GroupPlan whose layer(s) the snapshot covers gets
+    its ``chunk_offset`` leaf replaced - and its gain leaf
+    (``store.chunk_gain``) too, when the plan baked a measured gain table
+    of matching shape and no offset-encoding column sum; weights, scales
+    and all static metadata are kept, so the result has the identical
+    treedef and jitted serve steps keep their compiled executables.  All
+    three group kinds are walked: column_concat and batch_concat swap
+    their members' measured tables in (concatenated / member-stacked);
+    expert_stack groups have no measured device and are kept.  The legacy
     ``"_qkv_plan"`` alias is re-pointed at the swapped group's fused
-    plan.  Layers the snapshot does not cover (and scan-stacked plans,
-    which have no single device) are untouched.
+    plan.  Layers the snapshot does not cover - or whose tables do not
+    match the plan's shape (including a scan-stacked plan against plain
+    ``[C, N]`` tables; per-stack-member ``[S, C, N]`` tables DO swap) -
+    are untouched.
     """
     import jax.numpy as jnp
 
-    from repro.exec.lower import layer_with_offsets
+    from repro.exec.lower import layer_with_offsets, layer_with_tables
 
     def legacy_qkv_offsets(p: str):
         offs = []
@@ -669,10 +703,22 @@ def swap_calibration(lowered, snapshot, *, path: str = ""):
         for k, v in node.items():
             if k == _PLAN:
                 rec = snapshot.layer(p)
-                out[k] = v if (
-                    rec is None or rec.chunk_offset is None
-                    or getattr(v.store.codes, "ndim", 2) != 2
-                ) else layer_with_offsets(v, rec.chunk_offset)
+                if (rec is None or rec.chunk_offset is None
+                        or v.chunk_offset is None
+                        or jnp.shape(rec.chunk_offset)
+                        != v.chunk_offset.shape):
+                    out[k] = v
+                else:
+                    gain = None
+                    if (rec.gain_table is not None
+                            and v.store.chunk_gain is not None
+                            and v.colsum is None
+                            and jnp.shape(rec.gain_table)
+                            == v.store.chunk_gain.shape):
+                        gain = rec.gain_table
+                    out[k] = layer_with_tables(
+                        v, chunk_offset=rec.chunk_offset, chunk_gain=gain
+                    )
             elif k == _GROUPS:
                 out[k] = {
                     name: _swap_group(gp, snapshot, p)

@@ -151,23 +151,32 @@ class CompiledModel:
                         calibration=self.calibration)
 
     def with_calibration(self, snapshot) -> "CompiledModel":
-        """Hot-swap a refreshed calibration snapshot's OFFSET tables into
-        the baked plans (the drift-refresh path): only ``chunk_offset``
-        leaves change, treedef and static metadata are identical, so
-        jitted replays of :meth:`lower`'s output keep their compiled
-        executables.  Stack plans swap by spec layer name, tree plans by
-        dotted path (``api.compile.swap_calibration``)."""
+        """Hot-swap a refreshed calibration snapshot's measured tables
+        into the baked plans (the drift-refresh and fleet-remap path):
+        only the ``chunk_offset`` leaves - and, where the plan baked a
+        measured gain table (``store.chunk_gain``) and a matching
+        ``gain_table`` is present, the gain leaves - change; treedef and
+        static metadata are identical, so jitted replays of
+        :meth:`lower`'s output keep their compiled executables.  Stack
+        plans swap by spec layer name, tree plans by dotted path
+        (``api.compile.swap_calibration``)."""
         from repro.api.compile import swap_calibration
-        from repro.exec.lower import plan_with_offsets
+        from repro.exec.lower import plan_with_tables
 
         if self.lowered is None:
             return dataclasses.replace(self, calibration=snapshot)
         if isinstance(self.lowered, AnalogPlan):
-            offs = []
-            for l in self.spec.layers:
+            offs, gains = [], []
+            for l, lp in zip(self.spec.layers, self.lowered.layers):
                 rec = snapshot.layer(l.name)
                 offs.append(None if rec is None else rec.chunk_offset)
-            lowered = plan_with_offsets(self.lowered, offs)
+                g = None if rec is None else rec.gain_table
+                if (g is None or lp.store.chunk_gain is None
+                        or lp.colsum is not None
+                        or jnp.shape(g) != lp.store.chunk_gain.shape):
+                    g = None
+                gains.append(g)
+            lowered = plan_with_tables(self.lowered, offs, gains)
         else:
             lowered = swap_calibration(self.lowered, snapshot)
         return dataclasses.replace(

@@ -31,6 +31,63 @@ from repro.core.hw import BSS2
 from repro.core.noise import NoiseConfig
 
 
+def measure_readout(
+    w_code: jax.Array,
+    a_code: jax.Array,
+    *,
+    gain: float,
+    fpn: dict,
+    drift: jax.Array,
+    key: jax.Array,
+    noise: NoiseConfig,
+    k: int,
+    n: int,
+    chunk_rows: int,
+    n_chunks: int,
+) -> jax.Array:
+    """The pure physics of one measurement pass: code clipping, hidden
+    fixed-pattern weights, chunked accumulation, offsets + drift, readout
+    noise from an already-folded ``key``, saturating ADC.
+
+    Module-level and pure in (``fpn``, ``drift``, ``key``) so a
+    :class:`~repro.fleet.placement.ChipFleet` can ``jax.vmap`` it over
+    stacked per-chip hidden state and stay bit-identical to sequential
+    :meth:`VirtualChip.measure` calls (which route through this same
+    function).
+    """
+    w_code = jnp.clip(
+        jnp.round(jnp.asarray(w_code, jnp.float32)),
+        -float(BSS2.w_max), float(BSS2.w_max),
+    )
+    a_code = jnp.clip(
+        jnp.round(jnp.asarray(a_code, jnp.float32)),
+        0.0, float(BSS2.a_max),
+    )
+    w_eff = noise_lib.effective_weight(w_code, fpn)
+    pad = n_chunks * chunk_rows - k
+    if pad:
+        w_eff = jnp.pad(w_eff, ((0, pad), (0, 0)))
+        a_code = jnp.pad(
+            a_code, [(0, 0)] * (a_code.ndim - 1) + [(0, pad)]
+        )
+    batch = a_code.shape[:-1]
+    a_c = a_code.reshape(batch + (n_chunks, chunk_rows))
+    w_c = w_eff.reshape(n_chunks, chunk_rows, n)
+    v = jnp.einsum(
+        "...ck,ckn->...cn", a_c, w_c,
+        preferred_element_type=jnp.float32,
+    ) * gain
+    off = fpn.get("chunk_offset")
+    v = v + (drift if off is None else off + drift)
+    if noise.readout_std > 0.0 and noise.mode != "none":
+        v = v + noise.readout_std * jax.random.normal(
+            key, v.shape, jnp.float32
+        )
+    return jnp.clip(
+        jnp.round(v), float(BSS2.adc_min), float(BSS2.adc_max)
+    )
+
+
 class VirtualChip:
     """One analog device: hidden fixed pattern, noisy measurements only.
 
@@ -65,6 +122,7 @@ class VirtualChip:
         self._drift = jnp.zeros((self.n_chunks, self.n), jnp.float32)
         self._key = k_ro
         self._measurements = 0
+        self._dead = False
 
     @classmethod
     def from_params(
@@ -111,16 +169,12 @@ class VirtualChip:
         Returns [..., C, N]: every chunk pass's saturating ADC readout,
         including the hidden fixed-pattern gain/offset deviations, any
         accumulated offset drift, and fresh temporal readout noise for
-        every pass of every batch row.
+        every pass of every batch row.  A killed chip (:meth:`kill`)
+        still answers - rail-pinned at ``adc_min`` on every column, the
+        way a dead analog array reads back.
         """
-        w_code = jnp.clip(
-            jnp.round(jnp.asarray(w_code, jnp.float32)),
-            -float(BSS2.w_max), float(BSS2.w_max),
-        )
-        a_code = jnp.clip(
-            jnp.round(jnp.asarray(a_code, jnp.float32)),
-            0.0, float(BSS2.a_max),
-        )
+        w_code = jnp.asarray(w_code, jnp.float32)
+        a_code = jnp.asarray(a_code, jnp.float32)
         if w_code.shape != (self.k, self.n):
             raise ValueError(
                 f"w_code shape {w_code.shape} != chip grid "
@@ -130,33 +184,29 @@ class VirtualChip:
             raise ValueError(
                 f"a_code feeds {a_code.shape[-1]} rows, chip has {self.k}"
             )
-        w_eff = noise_lib.effective_weight(w_code, self._fpn)
-        pad = self.n_chunks * self.chunk_rows - self.k
-        if pad:
-            w_eff = jnp.pad(w_eff, ((0, pad), (0, 0)))
-            a_code = jnp.pad(
-                a_code, [(0, 0)] * (a_code.ndim - 1) + [(0, pad)]
-            )
-        batch = a_code.shape[:-1]
-        a_c = a_code.reshape(batch + (self.n_chunks, self.chunk_rows))
-        w_c = w_eff.reshape(self.n_chunks, self.chunk_rows, self.n)
-        v = jnp.einsum(
-            "...ck,ckn->...cn", a_c, w_c,
-            preferred_element_type=jnp.float32,
-        ) * gain
-        off = self._fpn.get("chunk_offset")
-        v = v + (self._drift if off is None else off + self._drift)
         self._measurements += 1
+        if self._dead:
+            shape = a_code.shape[:-1] + (self.n_chunks, self.n)
+            return jnp.full(shape, float(BSS2.adc_min), jnp.float32)
         key = jax.random.fold_in(self._key, self._measurements)
-        if self.noise.readout_std > 0.0 and self.noise.mode != "none":
-            v = v + self.noise.readout_std * jax.random.normal(
-                key, v.shape, jnp.float32
-            )
-        return jnp.clip(
-            jnp.round(v), float(BSS2.adc_min), float(BSS2.adc_max)
+        return measure_readout(
+            w_code, a_code, gain=gain, fpn=self._fpn, drift=self._drift,
+            key=key, noise=self.noise, k=self.k, n=self.n,
+            chunk_rows=self.chunk_rows, n_chunks=self.n_chunks,
         )
 
     # ------------------------------------------------------------ simulation
+    @property
+    def dead(self) -> bool:
+        return self._dead
+
+    def kill(self) -> None:
+        """Simulate a chip failure: every subsequent measurement reads
+        back rail-pinned ``adc_min`` codes.  The fleet health monitor
+        detects this through its probe path alone (the flag is hidden
+        state like everything else)."""
+        self._dead = True
+
     def apply_drift(self, key: jax.Array, std_lsb: float) -> None:
         """Simulate thermal ADC-offset drift: perturb the hidden offsets
         by ``std_lsb`` (LSB).  Gains are stable on this timescale - the

@@ -8,21 +8,28 @@ when it exceeds the threshold the monitor re-nulls the offsets (full
 repeat count) and hands back a refreshed
 :class:`~repro.calib.snapshot.CalibrationSnapshot`.
 
-The refresh touches ONLY offset tables - gains and activation scales are
+The refresh touches ONLY measured-value tables - activation scales are
 kept - so the engine can hot-swap it into its lowered plans leaf-for-leaf
 (:meth:`repro.api.CompiledModel.with_calibration` /
 ``api.swap_calibration``) without changing any treedef or static
 metadata: every jitted prefill/decode step keeps replaying its compiled
 executable, no recompilation.
+
+``gain_sweep=True`` adds a slow background gain track on top of the
+offset loop: each probe cycle re-fits ONE chunk's gain row (round-robin
+over every layer's chunks), staging the rows until the next refresh
+folds them into the snapshot alongside the re-nulled offsets - so a
+full gain re-scan amortizes over many serving batches and still rides
+the same value-only hot-swap.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 
 from repro.calib.device import VirtualChip
-from repro.calib.routines import null_offsets
+from repro.calib.routines import fit_gain_chunk, null_offsets
 from repro.calib.snapshot import CalibrationSnapshot
 from repro.obs import metrics as _metrics
 from repro.obs import trace as _trace
@@ -41,6 +48,10 @@ class DriftMonitor:
     refresh_repeats: averaging depth of the re-nulling measurement.
     every:           check cadence in :meth:`maybe_refresh` calls (the
                      engine calls it once per served batch).
+    gain_sweep:      re-fit one chunk's gain row per probe cycle
+                     (round-robin); staged rows fold into the next
+                     refresh's hot-swap.
+    gain_repeats:    averaging depth of each background gain fit.
     """
 
     def __init__(
@@ -52,6 +63,8 @@ class DriftMonitor:
         probe_repeats: int = 16,
         refresh_repeats: int = 64,
         every: int = 1,
+        gain_sweep: bool = False,
+        gain_repeats: int = 8,
     ):
         self.chips = dict(chips)
         self.snapshot = snapshot
@@ -59,8 +72,12 @@ class DriftMonitor:
         self.probe_repeats = int(probe_repeats)
         self.refresh_repeats = int(refresh_repeats)
         self.every = max(int(every), 1)
+        self.gain_sweep = bool(gain_sweep)
+        self.gain_repeats = int(gain_repeats)
         self.refreshes = 0
         self._calls = 0
+        self._gain_cursor = 0
+        self._pending_gains: Dict[str, Dict[int, jnp.ndarray]] = {}
 
     # --------------------------------------------------------------- probes
     def drift_lsb(self) -> float:
@@ -78,15 +95,59 @@ class DriftMonitor:
             worst = max(worst, rms)
         return worst
 
+    # ----------------------------------------------------- background gains
+    def _gain_sites(self) -> List[Tuple[str, int]]:
+        """(layer, chunk) sites the background sweep cycles over: every
+        chunk of every layer the snapshot holds a plain [chunks, N] gain
+        table for."""
+        sites: List[Tuple[str, int]] = []
+        for name, chip in self.chips.items():
+            rec = self.snapshot.layer(name)
+            gt = None if rec is None else rec.gain_table
+            if gt is None or getattr(gt, "ndim", 2) != 2:
+                continue
+            sites.extend((name, c) for c in range(chip.n_chunks))
+        return sites
+
+    def sweep_gain_chunk(self) -> Optional[Tuple[str, int]]:
+        """Re-fit ONE chunk's gain row (round-robin over every layer's
+        chunks) and stage it; the next :meth:`refresh` folds every staged
+        row into the snapshot.  Returns the probed (layer, chunk), or
+        None when no layer carries a gain table."""
+        sites = self._gain_sites()
+        if not sites:
+            return None
+        name, c = sites[self._gain_cursor % len(sites)]
+        self._gain_cursor += 1
+        row = fit_gain_chunk(
+            self.chips[name], c, repeats=self.gain_repeats
+        )
+        self._pending_gains.setdefault(name, {})[c] = row
+        _trace.event("drift.gain_probe", layer=name, chunk=c)
+        return name, c
+
     def refresh(self) -> CalibrationSnapshot:
-        """Re-null every layer's offsets (full averaging depth) and
-        return the refreshed snapshot (gains/scales untouched).  The
-        refreshed snapshot becomes the monitor's new reference."""
+        """Re-null every layer's offsets (full averaging depth), fold in
+        any background-swept gain rows, and return the refreshed snapshot
+        (activation scales untouched).  The refreshed snapshot becomes
+        the monitor's new reference."""
         with _trace.span("drift.refresh", layers=len(self.chips)):
-            self.snapshot = self.snapshot.with_offsets({
+            snap = self.snapshot.with_offsets({
                 name: null_offsets(chip, repeats=self.refresh_repeats)
                 for name, chip in self.chips.items()
             })
+            for name, rows in self._pending_gains.items():
+                rec = snap.layer(name)
+                if rec is None or rec.gain_table is None:
+                    continue
+                gt = jnp.asarray(rec.gain_table)
+                for c, row in rows.items():
+                    gt = gt.at[c].set(row)
+                snap = snap.with_layer(
+                    name, rec.replace(gain_table=gt)
+                )
+            self._pending_gains = {}
+            self.snapshot = snap
         self.refreshes += 1
         _metrics.counter("drift.hot_swap").inc()
         _trace.event("drift.hot_swap", refreshes=self.refreshes)
@@ -99,6 +160,8 @@ class DriftMonitor:
         self._calls += 1
         if self._calls % self.every:
             return None
+        if self.gain_sweep:
+            self.sweep_gain_chunk()
         lsb = self.drift_lsb()
         _metrics.histogram("drift.lsb").record(lsb)
         _trace.event("drift.probe", lsb=round(lsb, 4),

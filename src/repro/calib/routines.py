@@ -67,6 +67,34 @@ def _chunk_rows_real(chip: VirtualChip, c: int) -> int:
     return hi - c * chip.chunk_rows
 
 
+def fit_gain_chunk(
+    chip: VirtualChip,
+    c: int,
+    *,
+    levels: Sequence[int] = DEFAULT_RAMP,
+    repeats: int = 8,
+) -> jax.Array:
+    """One chunk's linearity-ramp gain fit (ONE measurement): unit
+    weights on chunk ``c``'s rows only, events ramped over ``levels``
+    (each level measured ``repeats`` times), least-squares slope per
+    column.  Returns [N] unitless multipliers (1.0 = nominal).
+
+    This is the unit of the DriftMonitor's slow background gain sweep -
+    one chunk per probe cycle instead of a full offline re-measure."""
+    g = probe_gain(chip.chunk_rows)
+    alphas = jnp.asarray(levels, jnp.float32)
+    lo, hi = c * chip.chunk_rows, min(chip.k, (c + 1) * chip.chunk_rows)
+    w = jnp.zeros((chip.k, chip.n), jnp.float32).at[lo:hi].set(1.0)
+    a = jnp.zeros(
+        (len(alphas), repeats, chip.k), jnp.float32
+    ).at[:, :, lo:hi].set(alphas[:, None, None])
+    adc = chip.measure(w, a, gain=g)[..., c, :]  # [L, R, N]
+    y = adc.mean(axis=1)                         # [L, N]
+    da = alphas - alphas.mean()
+    slope = (da[:, None] * (y - y.mean(axis=0))).sum(0) / (da**2).sum()
+    return slope / (g * _chunk_rows_real(chip, c))
+
+
 def fit_gain_table(
     chip: VirtualChip,
     *,
@@ -76,27 +104,16 @@ def fit_gain_table(
     """Fit the per-(chunk, column) fixed-pattern gain by linearity ramp
     sweeps.  Returns [C, N] unitless multipliers (1.0 = nominal).
 
-    Per chunk: unit weights on that chunk's rows only, events ramped over
-    ``levels`` (each level measured ``repeats`` times), least-squares
-    slope per column.  The requested probe gain cancels in the
-    normalization, offsets cancel in the slope, readout noise and ADC
-    rounding average out over the sweep.
+    Per chunk (:func:`fit_gain_chunk`): unit weights on that chunk's rows
+    only, events ramped over ``levels`` (each level measured ``repeats``
+    times), least-squares slope per column.  The requested probe gain
+    cancels in the normalization, offsets cancel in the slope, readout
+    noise and ADC rounding average out over the sweep.
     """
-    g = probe_gain(chip.chunk_rows)
-    alphas = jnp.asarray(levels, jnp.float32)
-    tables = []
-    for c in range(chip.n_chunks):
-        lo, hi = c * chip.chunk_rows, min(chip.k, (c + 1) * chip.chunk_rows)
-        w = jnp.zeros((chip.k, chip.n), jnp.float32).at[lo:hi].set(1.0)
-        a = jnp.zeros(
-            (len(alphas), repeats, chip.k), jnp.float32
-        ).at[:, :, lo:hi].set(alphas[:, None, None])
-        adc = chip.measure(w, a, gain=g)[..., c, :]  # [L, R, N]
-        y = adc.mean(axis=1)                         # [L, N]
-        da = alphas - alphas.mean()
-        slope = (da[:, None] * (y - y.mean(axis=0))).sum(0) / (da**2).sum()
-        tables.append(slope / (g * _chunk_rows_real(chip, c)))
-    return jnp.stack(tables, axis=0)
+    return jnp.stack([
+        fit_gain_chunk(chip, c, levels=levels, repeats=repeats)
+        for c in range(chip.n_chunks)
+    ], axis=0)
 
 
 def calibrate_chip(

@@ -3,17 +3,26 @@
 On a real multi-pod deployment these wrap ``jax.distributed`` process
 groups; the mechanisms themselves (heartbeats, bounded retry with rollback
 to the last checkpoint, straggler detection, elastic re-mesh) are host-side
-Python and fully testable on one process - which is what tests/test_fault.py
-does.
+Python and fully testable on one process - which is what
+tests/test_train.py's fault-tolerance cases do.
 
 Components:
 - ``Heartbeat``      - liveness file per worker + stale-peer detection
+                       (training workers; CHIP liveness goes through the
+                       probe path below)
 - ``RetryPolicy``    - bounded exponential backoff, resume-from-checkpoint
 - ``StragglerClock`` - per-step timing stats; flags workers/steps slower
                        than ``k x median`` (mitigation: skip-and-rebalance)
-- ``ElasticMesh``    - recompute the device mesh when the healthy-host set
-                       changes; batch is re-sharded by the stateless data
-                       pipeline (repro.data.lm_data indexes by step).
+- ``elastic_mesh_shape`` - recompute the device mesh when the healthy
+                       chip set changes; ALWAYS a 3-tuple
+                       ``(pods, data_per_pod, model_parallel)``; batch is
+                       re-sharded by the stateless data pipeline
+                       (repro.data.lm_data indexes by step).
+- ``healthy_chips`` / ``fleet_mesh_shape`` - fleet-side liveness: chip
+                       health is decided by the measurement-only probe of
+                       :class:`repro.fleet.FleetMonitor` (a dead chip
+                       rails its readout; no file heartbeats on-chip),
+                       then fed into the same elastic mesh math.
 """
 from __future__ import annotations
 
@@ -108,11 +117,16 @@ class StragglerClock:
 
 
 def elastic_mesh_shape(n_healthy_chips: int, model_parallel: int = 16,
-                       pod_size: int = 256):
-    """Largest (pod, data, model) mesh that fits the healthy chip set while
-    preserving the model-parallel degree (params resharding is free along
-    pure-DP axes; the data pipeline is stateless in step, so scaling the
-    data axis only changes per-shard batch slices)."""
+                       pod_size: int = 256) -> tuple[int, int, int]:
+    """Largest mesh that fits the healthy chip set while preserving the
+    model-parallel degree (params resharding is free along pure-DP axes;
+    the data pipeline is stateless in step, so scaling the data axis only
+    changes per-shard batch slices).
+
+    ONE shape contract: always ``(pods, data_per_pod, model_parallel)``.
+    A fleet too small (or too ragged) to split across pods collapses to
+    ``pods == 1`` with every data replica in it - callers squeeze the pod
+    axis themselves if their mesh is flat."""
     chips = (n_healthy_chips // model_parallel) * model_parallel
     if chips == 0:
         raise ValueError("not enough healthy chips for one model replica")
@@ -120,4 +134,27 @@ def elastic_mesh_shape(n_healthy_chips: int, model_parallel: int = 16,
     pods = max(1, chips // pod_size)
     if pods > 1 and data % pods == 0:
         return (pods, data // pods, model_parallel)
-    return (data, model_parallel)
+    return (1, data, model_parallel)
+
+
+def healthy_chips(monitor) -> list[int]:
+    """Live chip ids of a fleet, decided by the probe path: one vmapped
+    zero-input measurement (``FleetMonitor.probe_lsb``) against the
+    calibrated offsets, chips under the dead threshold are healthy.  File
+    heartbeats stay for training WORKERS; chips have no filesystem, so
+    their liveness is measurement-only."""
+    lsb = monitor.probe_lsb()
+    return [
+        i for i, v in enumerate(lsb)
+        if float(v) <= monitor.dead_threshold_lsb
+    ]
+
+
+def fleet_mesh_shape(monitor, *, model_parallel: int = 16,
+                     pod_size: int = 256) -> tuple[int, int, int]:
+    """Probe a fleet and return the elastic mesh over its healthy chips:
+    ``elastic_mesh_shape(len(healthy_chips(monitor)), ...)``."""
+    return elastic_mesh_shape(
+        len(healthy_chips(monitor)),
+        model_parallel=model_parallel, pod_size=pod_size,
+    )

@@ -582,14 +582,36 @@ def lower_batch_concat(
     plans = []
     for p, c in zip(layer_params, cs):
         if p["w"].ndim == 3:
-            plans.append(jax.vmap(
-                lambda q: lower_layer(q, cfg, signed_input=signed_input)
-            )(p))
+            if stacked_calib(c, p["w"].shape[0]):
+                plans.append(jax.vmap(
+                    lambda q, cc: lower_layer(
+                        q, cfg, signed_input=signed_input, calib=cc
+                    )
+                )(p, c))
+            else:
+                plans.append(jax.vmap(
+                    lambda q: lower_layer(q, cfg, signed_input=signed_input)
+                )(p))
         else:
             plans.append(
                 lower_layer(p, cfg, signed_input=signed_input, calib=c)
             )
     return _stack_layer_plans(plans)
+
+
+def stacked_calib(calib, s: int) -> bool:
+    """True when ``calib`` is a per-stack-member calibration record whose
+    every table carries a leading stack axis of length ``s`` - i.e. one
+    measured device per scan-stack member (the fleet gather's
+    ``[S, C, N]`` tables).  Such a record joint-vmaps with the stacked
+    params through :func:`lower_layer`, baking each member's own device
+    tables."""
+    if calib is None:
+        return False
+    leaves = jax.tree_util.tree_leaves(calib)
+    return bool(leaves) and all(
+        getattr(v, "ndim", 0) >= 1 and v.shape[0] == s for v in leaves
+    )
 
 
 def lower_expert_stack(w, cfg: AnalogConfig) -> LayerPlan:
@@ -946,6 +968,76 @@ def plan_with_offsets(
     layers = tuple(
         lp if off is None else layer_with_offsets(lp, off)
         for lp, off in zip(plan.layers, offsets)
+    )
+    out = dataclasses.replace(plan, layers=layers)
+    if plan.mega is not None:
+        out = dataclasses.replace(out, mega=pack_megakernel(out))
+    return out
+
+
+def layer_with_tables(
+    lp: LayerPlan,
+    *,
+    chunk_offset=None,
+    chunk_gain=None,
+) -> LayerPlan:
+    """Swap ONE lowered layer's measured calibration tables value-only
+    (the fleet remap / background-gain-sweep hot-swap).
+
+    Like :func:`layer_with_offsets` but also covering the per-(chunk,
+    column) gain table: both live on data leaves of the plan
+    (``chunk_offset`` on the layer, ``chunk_gain`` inside the
+    :class:`WeightStore`), so a swap keeps the identical treedef and
+    every jitted replay hits its compiled cache.  A gain swap requires
+    the plan to have been lowered WITH a measured gain table (otherwise
+    the leaf is absent - re-lower instead) and no offset-encoding
+    column-sum (``colsum`` folds the baked gains and would go stale).
+    ``None`` keeps either table.
+    """
+    if chunk_offset is not None:
+        lp = layer_with_offsets(lp, chunk_offset)
+    if chunk_gain is not None:
+        if lp.store.chunk_gain is None:
+            raise ValueError(
+                "cannot hot-swap a gain table into a plan lowered "
+                "without one (treedef would change); re-lower the layer"
+            )
+        if lp.colsum is not None:
+            raise ValueError(
+                "cannot hot-swap gains under an offset-encoding column "
+                "sum (colsum folds the baked gains); re-lower the layer"
+            )
+        chunk_gain = jnp.asarray(chunk_gain, jnp.float32)
+        if chunk_gain.shape != lp.store.chunk_gain.shape:
+            raise ValueError(
+                f"gain table shape {chunk_gain.shape} != baked "
+                f"{lp.store.chunk_gain.shape}"
+            )
+        lp = dataclasses.replace(
+            lp, store=dataclasses.replace(lp.store, chunk_gain=chunk_gain)
+        )
+    return lp
+
+
+def plan_with_tables(
+    plan: AnalogPlan,
+    offsets: Sequence[Optional[jax.Array]],
+    gains: Optional[Sequence[Optional[jax.Array]]] = None,
+) -> AnalogPlan:
+    """Swap per-layer offset AND gain tables of a lowered stack
+    (:func:`layer_with_tables` per layer; ``None`` entries keep that
+    layer's table).  The megakernel packing, when baked, is re-packed
+    from the swapped layers - its static schedule is unchanged, so
+    replays do not recompile."""
+    gains = gains if gains is not None else [None] * len(plan.layers)
+    if len(offsets) != len(plan.layers) or len(gains) != len(plan.layers):
+        raise ValueError(
+            f"{len(offsets)} offset / {len(gains)} gain tables for "
+            f"{len(plan.layers)} layers"
+        )
+    layers = tuple(
+        layer_with_tables(lp, chunk_offset=off, chunk_gain=g)
+        for lp, off, g in zip(plan.layers, offsets, gains)
     )
     out = dataclasses.replace(plan, layers=layers)
     if plan.mega is not None:

@@ -1,0 +1,50 @@
+"""Chip-fleet scale-out: placement, vmapped fleet calibration, failure
+remap (ROADMAP item 3).
+
+The paper serves ONE BSS-2 mobile chip; production is thousands of small
+analog arrays (hxtorch frames multi-chip operation as a partitioning
+problem, and each chip needs its *own* measured calibration).  This
+subsystem makes the chip a first-class placement target:
+
+    shapes = fleet.model_layer_shapes(spec, params)
+    pl     = fleet.place_model(shapes, n_chips=6, spares=2)   # deterministic
+    chips  = fleet.ChipFleet.for_placement(key, pl)           # the devices
+    fsnap  = fleet.calibrate_fleet(chips)                     # ONE vmapped
+                                                              # measure/step
+    snap   = fleet.model_snapshot(pl, fsnap)                  # gather [D,C,N]
+                                                              # -> per-layer
+                                                              # [C,N]/[S,C,N]
+    model  = api.compile(spec, params, run, calibration=snap) # bake
+    mon    = fleet.FleetMonitor(chips, pl, fsnap)             # serve loop
+    engine = ServeEngine(..., calibration=snap, fleet=mon)
+
+- :mod:`repro.fleet.placement` - ``Placement``: every layer chunk (from
+  ``core.partition.plan_tiles``) assigned to a (chip, slot) in a
+  ``ChipFleet`` of :class:`~repro.calib.device.VirtualChip`\\ s, with
+  spare pools and a deterministic first-fit packing policy.
+- :mod:`repro.fleet.calibrate` - vmapped fleet calibration producing a
+  ``FleetSnapshot`` (``[D, C, N]`` tables, ``.npz`` round-trip), plus the
+  gather back to the per-layer ``CalibrationSnapshot`` that
+  ``api.compile(calibration=)`` consumes - including ``[S, C, N]`` tables
+  for scan-stacked layers (S physical devices per stacked matrix).
+- :mod:`repro.fleet.health` - ``FleetMonitor``: per-chip probe heartbeats
+  (the DriftMonitor's zero-input probe, fleet-wide), dead-chip detection,
+  and ``remap()`` - re-lower ONLY the dead chip's chunks onto a spare and
+  hot-swap them into serving plans exactly like a drift refresh.
+"""
+from repro.fleet.calibrate import (  # noqa: F401
+    FLEET_FORMAT_VERSION,
+    FleetSnapshot,
+    calibrate_fleet,
+    fleet_fit_gain_table,
+    fleet_null_offsets,
+    model_snapshot,
+)
+from repro.fleet.health import FleetMonitor  # noqa: F401
+from repro.fleet.placement import (  # noqa: F401
+    ChipFleet,
+    ChunkAssignment,
+    Placement,
+    model_layer_shapes,
+    place_model,
+)

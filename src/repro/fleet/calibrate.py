@@ -1,0 +1,248 @@
+"""Fleet calibration: every chip measured in one vmapped sweep.
+
+2006.13177 shows each BSS-2 chip needs its *own* measured calibration;
+this module runs the blind measure->fit pipeline of
+:mod:`repro.calib.routines` against a whole :class:`ChipFleet` at once -
+the per-chip ``[C, N]`` tables become fleet ``[D, C, N]`` tables in a
+serializable :class:`FleetSnapshot` (``.npz`` round-trip like
+:class:`~repro.calib.snapshot.CalibrationSnapshot`).
+
+Every step is ONE fleet-wide measurement (one ``jax.vmap`` over stacked
+hidden chip state) instead of a Python loop over chips, and the fits
+apply the exact reductions of :func:`~repro.calib.routines.null_offsets`
+/ :func:`~repro.calib.routines.fit_gain_chunk` per chip - so
+``calibrate_fleet(fleet).chip(i)`` is bit-identical to
+``calibrate_chip(fleet[i])`` on a fresh chip (tested pin).
+
+:func:`model_snapshot` gathers the fleet tables back through a
+:class:`~repro.fleet.placement.Placement` into the per-layer snapshot
+``api.compile(calibration=)`` consumes - including ``[S, C, N]`` tables
+for scan-stacked layers (S physical devices per stacked matrix), which
+closes the "calibrate scan-stacked block plans per physical device"
+thread.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.calib.routines import (
+    DEFAULT_RAMP,
+    _chunk_rows_real,
+    probe_gain,
+)
+from repro.calib.snapshot import CalibrationSnapshot, LayerCalibration
+from repro.core.hw import BSS2
+from repro.core.partition import plan_tiles
+from repro.fleet.placement import ChipFleet, Placement
+from repro.obs import trace as _trace
+
+FLEET_FORMAT_VERSION = "repro-fleet-v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSnapshot:
+    """One calibration run over a whole fleet: ``[D, C, N]`` tables
+    (device, chunk-slot, column), versioned and serializable."""
+
+    gain_table: jax.Array      # [D, C, N]
+    chunk_offset: jax.Array    # [D, C, N]
+    version: str = FLEET_FORMAT_VERSION
+    source: str = ""
+
+    @property
+    def n_chips(self) -> int:
+        return self.gain_table.shape[0]
+
+    def chip(self, i: int) -> LayerCalibration:
+        """One chip's record, in the per-layer snapshot vocabulary."""
+        return LayerCalibration(
+            gain_table=self.gain_table[i],
+            chunk_offset=self.chunk_offset[i],
+        )
+
+    def with_chip(self, i: int, rec: LayerCalibration) -> "FleetSnapshot":
+        """Replace ONE chip's tables (e.g. a freshly calibrated spare) -
+        every other chip's arrays are untouched."""
+        return dataclasses.replace(
+            self,
+            gain_table=self.gain_table.at[i].set(
+                jnp.asarray(rec.gain_table, jnp.float32)
+            ),
+            chunk_offset=self.chunk_offset.at[i].set(
+                jnp.asarray(rec.chunk_offset, jnp.float32)
+            ),
+        )
+
+    # ------------------------------------------------------------- serialize
+    def save(self, path) -> None:
+        """Serialize to one ``.npz`` (bit-exact round-trip, no pickle)."""
+        arrays = {
+            "__version__": np.asarray(self.version),
+            "__source__": np.asarray(self.source),
+            "gain_table": np.asarray(self.gain_table),
+            "chunk_offset": np.asarray(self.chunk_offset),
+        }
+        with open(path, "wb") as f:
+            np.savez(f, **arrays)
+
+    @classmethod
+    def load(cls, path) -> "FleetSnapshot":
+        with np.load(path, allow_pickle=False) as z:
+            version = str(z["__version__"])
+            if version != FLEET_FORMAT_VERSION:
+                raise ValueError(
+                    f"fleet snapshot format {version!r} is not "
+                    f"{FLEET_FORMAT_VERSION!r}; re-measure or migrate"
+                )
+            return cls(
+                gain_table=jnp.asarray(z["gain_table"]),
+                chunk_offset=jnp.asarray(z["chunk_offset"]),
+                version=version,
+                source=str(z["__source__"]),
+            )
+
+
+jax.tree_util.register_dataclass(
+    FleetSnapshot,
+    data_fields=["gain_table", "chunk_offset"],
+    meta_fields=["version", "source"],
+)
+
+
+# --------------------------------------------------------------------------
+# fleet-wide measure -> fit
+# --------------------------------------------------------------------------
+def fleet_null_offsets(fleet: ChipFleet, *, repeats: int = 64) -> jax.Array:
+    """Offset nulling for every chip at once: zero weights, zero events,
+    ONE fleet measurement, average the repeats.  Returns [D, C, N]."""
+    w = jnp.zeros((fleet.k, fleet.n), jnp.float32)
+    a = jnp.zeros((repeats, fleet.k), jnp.float32)
+    adc = fleet.measure(w, a)                      # [D, R, C, N]
+    return adc.mean(axis=1)
+
+
+def fleet_fit_gain_table(
+    fleet: ChipFleet,
+    *,
+    levels: Sequence[int] = DEFAULT_RAMP,
+    repeats: int = 8,
+) -> jax.Array:
+    """Linearity-ramp gain fit for every chip at once: per chunk-slot,
+    ONE fleet measurement of the ramp probe, least-squares slope per
+    (device, column).  Returns [D, C, N] unitless multipliers.
+
+    Per chip this is exactly :func:`repro.calib.routines.fit_gain_chunk`
+    - the same probe, the same measurement order, the same reductions -
+    just without the Python loop over devices.
+    """
+    g = probe_gain(fleet.chunk_rows)
+    alphas = jnp.asarray(levels, jnp.float32)
+    da = alphas - alphas.mean()
+    tables = []
+    for c in range(fleet.n_chunks):
+        lo = c * fleet.chunk_rows
+        hi = min(fleet.k, (c + 1) * fleet.chunk_rows)
+        w = jnp.zeros((fleet.k, fleet.n), jnp.float32).at[lo:hi].set(1.0)
+        a = jnp.zeros(
+            (len(alphas), repeats, fleet.k), jnp.float32
+        ).at[:, :, lo:hi].set(alphas[:, None, None])
+        adc = fleet.measure(w, a, gain=g)[..., c, :]  # [D, L, R, N]
+        y = adc.mean(axis=2)                          # [D, L, N]
+        slope = (
+            (da[None, :, None] * (y - y.mean(axis=1, keepdims=True)))
+            .sum(axis=1) / (da**2).sum()
+        )
+        tables.append(slope / (g * _chunk_rows_real(fleet[0], c)))
+    return jnp.stack(tables, axis=1)                  # [D, C, N]
+
+
+def calibrate_fleet(
+    fleet: ChipFleet,
+    *,
+    offset_repeats: int = 64,
+    gain_levels: Sequence[int] = DEFAULT_RAMP,
+    gain_repeats: int = 8,
+    source: str = "",
+) -> FleetSnapshot:
+    """Full blind calibration of every chip in the fleet: gain fit then
+    offset nulling (the :func:`~repro.calib.routines.calibrate_chip`
+    order, so each chip's measurement sequence - and therefore its
+    readout-noise stream - matches a sequential per-chip run exactly)."""
+    with _trace.span("fleet.calibrate", chips=len(fleet)):
+        gain = fleet_fit_gain_table(
+            fleet, levels=gain_levels, repeats=gain_repeats
+        )
+        offset = fleet_null_offsets(fleet, repeats=offset_repeats)
+    return FleetSnapshot(
+        gain_table=gain, chunk_offset=offset, source=source
+    )
+
+
+# --------------------------------------------------------------------------
+# gather: fleet tables -> per-layer snapshot
+# --------------------------------------------------------------------------
+def model_snapshot(
+    placement: Placement,
+    fleet_snapshot: FleetSnapshot,
+    *,
+    base: Optional[CalibrationSnapshot] = None,
+    layers: Optional[Sequence[str]] = None,
+    source: Optional[str] = None,
+) -> CalibrationSnapshot:
+    """Gather fleet ``[D, C, N]`` tables into the per-layer snapshot that
+    ``api.compile(calibration=)`` bakes into plans.
+
+    Each placed layer gets a full-width ``[C, N_layer]`` gain/offset
+    table (``[S, C, N_layer]`` for scan-stacked layers - one device set
+    per stack member) assembled from its assignments' (chip, slot)
+    tables; column tiles concatenate along N.  ``base`` supplies the
+    records to extend (activation scales and any unplaced layer survive
+    untouched); ``layers`` restricts the gather to the named layers - the
+    remap hot-swap path, where every OTHER layer must keep bit-identical
+    arrays so its executables are reused.
+    """
+    if fleet_snapshot.n_chips < placement.n_chips:
+        raise ValueError(
+            f"fleet snapshot covers {fleet_snapshot.n_chips} chips, "
+            f"placement expects {placement.n_chips}"
+        )
+    gain = np.asarray(fleet_snapshot.gain_table, np.float32)
+    offset = np.asarray(fleet_snapshot.chunk_offset, np.float32)
+    spec = dataclasses.replace(
+        BSS2, signed_rows=placement.chunk_rows, n_cols=placement.cols
+    )
+    by_layer = placement.by_layer()
+    snap = base if base is not None else CalibrationSnapshot()
+    if source is not None or base is None:
+        snap = dataclasses.replace(
+            snap, source=source if source is not None
+            else fleet_snapshot.source,
+        )
+    names = placement.layer_names() if layers is None else layers
+    shapes = dict(placement.shapes)
+    for name in names:
+        shape = shapes[name]
+        stacked = len(shape) == 3
+        k, n = shape[-2], shape[-1]
+        grid = plan_tiles(k, n, spec=spec)
+        lead = (shape[0],) if stacked else ()
+        g = np.ones(lead + (grid.row_chunks, n), np.float32)
+        o = np.zeros(lead + (grid.row_chunks, n), np.float32)
+        for a in by_layer.get(name, []):
+            c0 = a.coltile * placement.cols
+            w = min(n - c0, placement.cols)
+            idx = ((a.stack,) if stacked else ()) + (
+                a.chunk, slice(c0, c0 + w)
+            )
+            g[idx] = gain[a.chip, a.slot, :w]
+            o[idx] = offset[a.chip, a.slot, :w]
+        rec = snap.layer(name) or LayerCalibration()
+        snap = snap.with_layer(name, rec.replace(
+            gain_table=jnp.asarray(g), chunk_offset=jnp.asarray(o)
+        ))
+    return snap

@@ -1,0 +1,388 @@
+"""Chip-fleet placement: every layer chunk assigned to a physical device.
+
+``core.partition.plan_tiles`` already tiles a weight matrix into
+(row-chunk, column-tile) hardware tiles; this module assigns each tile a
+home - a slot on one :class:`~repro.calib.device.VirtualChip` in a
+:class:`ChipFleet` - with a deterministic first-fit packing policy and a
+spare pool for failure remap.  A :class:`Placement` is a frozen all-meta
+pytree (hashable, jit-static), so plans and verify rules can carry it
+without touching any treedef.
+
+Geometry: a fleet chip hosts ``slots`` tiles of ``chunk_rows`` x ``cols``
+synapses (one tile per ADC chunk pass), i.e. its logical grid is
+``(slots * chunk_rows, cols)``.  A layer ``[K, N]`` needs
+``ceil(K / chunk_rows) * ceil(N / cols)`` tiles; a scan-stacked layer
+``[S, K, N]`` is S physical copies of that (one device set per stack
+member - the hxtorch partitioning story).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.calib import device as _device
+from repro.calib.device import VirtualChip
+from repro.core.hw import BSS2
+from repro.core.noise import NoiseConfig
+from repro.core.partition import plan_tiles
+
+Shape = Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkAssignment:
+    """One hardware tile of one layer, placed: layer row-chunk ``chunk``
+    x column-tile ``coltile`` (of stack member ``stack``; -1 for a plain
+    2-D layer) lives in chunk-slot ``slot`` of chip ``chip``."""
+
+    layer: str
+    chunk: int
+    coltile: int
+    chip: int
+    slot: int
+    stack: int = -1
+
+    @property
+    def site(self) -> Tuple[str, int, int, int]:
+        """The logical tile this assignment places (placement-invariant)."""
+        return (self.layer, self.stack, self.chunk, self.coltile)
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Assignment of every model tile to a (chip, slot), plus the fleet
+    geometry and the spare pool.  Frozen + all-meta: two placements are
+    equal iff they place identically."""
+
+    assignments: Tuple[ChunkAssignment, ...]
+    shapes: Tuple[Tuple[str, Shape], ...]
+    n_chips: int
+    slots: int
+    chunk_rows: int
+    cols: int
+    spares: Tuple[int, ...] = ()
+
+    # ------------------------------------------------------------- queries
+    def layer_names(self) -> Tuple[str, ...]:
+        return tuple(name for name, _ in self.shapes)
+
+    def assignments_on(self, chip: int) -> Tuple[ChunkAssignment, ...]:
+        return tuple(a for a in self.assignments if a.chip == chip)
+
+    def by_layer(self) -> Dict[str, List[ChunkAssignment]]:
+        out: Dict[str, List[ChunkAssignment]] = {}
+        for a in self.assignments:
+            out.setdefault(a.layer, []).append(a)
+        return out
+
+    def occupancy(self) -> Dict[int, float]:
+        """Fraction of each chip's slots in use (every chip, spares at
+        0.0 until a remap promotes them)."""
+        used = {c: 0 for c in range(self.n_chips)}
+        for a in self.assignments:
+            used[a.chip] += 1
+        return {c: used[c] / self.slots for c in range(self.n_chips)}
+
+    # --------------------------------------------------------------- remap
+    def remap(
+        self, dead: int, *, spare: Optional[int] = None
+    ) -> Tuple["Placement", Tuple[ChunkAssignment, ...]]:
+        """Reassign ONLY the dead chip's tiles onto a spare.
+
+        Returns the new placement plus the moved assignments (the exact
+        chunk set a hot-swap re-lowers).  The promoted spare leaves the
+        spare pool; the dead chip keeps no assignments and never rejoins.
+        Deterministic: tiles keep their relative order and fill the
+        spare's slots from 0.
+        """
+        moved_from = self.assignments_on(dead)
+        if spare is None:
+            free = [s for s in self.spares
+                    if s != dead and not self.assignments_on(s)]
+            if not free:
+                raise ValueError(
+                    f"no spare chip available to remap chip {dead}"
+                )
+            spare = free[0]
+        if spare == dead or spare not in self.spares:
+            raise ValueError(f"chip {spare} is not in the spare pool")
+        if self.assignments_on(spare):
+            raise ValueError(f"spare chip {spare} is already occupied")
+        if len(moved_from) > self.slots:
+            raise ValueError(
+                f"chip {dead} holds {len(moved_from)} tiles > "
+                f"{self.slots} slots on the spare"
+            )
+        moved = tuple(
+            dataclasses.replace(a, chip=spare, slot=i)
+            for i, a in enumerate(moved_from)
+        )
+        by_site = {a.site: a for a in moved}
+        assignments = tuple(
+            by_site.get(a.site, a) for a in self.assignments
+        )
+        spares = tuple(s for s in self.spares if s != spare)
+        new = dataclasses.replace(
+            self, assignments=assignments, spares=spares
+        )
+        return new, moved
+
+
+jax.tree_util.register_dataclass(
+    Placement,
+    data_fields=[],
+    meta_fields=["assignments", "shapes", "n_chips", "slots",
+                 "chunk_rows", "cols", "spares"],
+)
+
+
+def _layer_sites(
+    name: str, shape: Shape, *, chunk_rows: int, cols: int
+) -> List[Tuple[str, int, int, int]]:
+    """Deterministic tile enumeration of one layer: stack-major, then
+    row-chunk, then column-tile (``core.partition.plan_tiles`` grid)."""
+    if len(shape) == 3:
+        stacks, (k, n) = range(shape[0]), shape[1:]
+    elif len(shape) == 2:
+        stacks, (k, n) = [-1], shape
+    else:
+        raise ValueError(f"layer {name!r}: shape {shape} is not a matmul")
+    spec = dataclasses.replace(BSS2, signed_rows=chunk_rows, n_cols=cols)
+    grid = plan_tiles(k, n, spec=spec)
+    return [
+        (name, s, c, t)
+        for s in stacks
+        for c in range(grid.row_chunks)
+        for t in range(grid.col_tiles)
+    ]
+
+
+def place_model(
+    shapes: Union[Mapping[str, Shape], Sequence[Tuple[str, Shape]]],
+    *,
+    n_chips: int,
+    spares: int = 0,
+    slots: Optional[int] = None,
+    chunk_rows: int = BSS2.signed_rows,
+    cols: int = BSS2.n_cols,
+) -> Placement:
+    """Deterministic first-fit packing of every layer tile onto a fleet.
+
+    ``shapes`` maps layer name -> weight shape ([K, N] or scan-stacked
+    [S, K, N]) in model order; tiles fill chip 0 slot-by-slot, then chip
+    1, ... across the ``n_chips - spares`` serving chips.  The last
+    ``spares`` chip ids form the spare pool and receive nothing.
+    ``slots`` defaults to the minimum that fits.  Same shapes + same
+    knobs -> the identical Placement, always (tested property).
+    """
+    items = list(shapes.items()) if isinstance(shapes, Mapping) \
+        else [(str(n), tuple(s)) for n, s in shapes]
+    if n_chips <= spares:
+        raise ValueError(
+            f"{n_chips} chips with {spares} spares leaves no serving chip"
+        )
+    sites = [
+        site for name, shape in items
+        for site in _layer_sites(name, shape,
+                                 chunk_rows=chunk_rows, cols=cols)
+    ]
+    serving = n_chips - spares
+    if slots is None:
+        slots = max(1, -(-len(sites) // serving))
+    if len(sites) > serving * slots:
+        raise ValueError(
+            f"{len(sites)} tiles exceed fleet capacity "
+            f"{serving} chips x {slots} slots"
+        )
+    assignments = tuple(
+        ChunkAssignment(layer=name, stack=s, chunk=c, coltile=t,
+                        chip=i // slots, slot=i % slots)
+        for i, (name, s, c, t) in enumerate(sites)
+    )
+    return Placement(
+        assignments=assignments,
+        shapes=tuple((n, tuple(s)) for n, s in items),
+        n_chips=int(n_chips), slots=int(slots),
+        chunk_rows=int(chunk_rows), cols=int(cols),
+        spares=tuple(range(serving, n_chips)),
+    )
+
+
+def model_layer_shapes(spec, params) -> List[Tuple[str, Shape]]:
+    """Ordered (name, weight shape) of every analog layer - the same
+    names the CalibrationSnapshot uses (spec layer names for stacks,
+    dotted tree paths for trees), INCLUDING scan-stacked 3-D layers."""
+    from repro.api.compile import iter_analog_layers
+    from repro.calib.routines import _stack_layer_params
+
+    if spec.kind == "stack":
+        return [
+            (l.name, tuple(p["w"].shape))
+            for l, p in zip(spec.layers, _stack_layer_params(spec, params))
+        ]
+    return [
+        (path, tuple(node["w"].shape))
+        for path, node in iter_analog_layers(params)
+    ]
+
+
+class ChipFleet:
+    """A pool of :class:`VirtualChip`\\ s with identical geometry and
+    noise model but DISTINCT hidden patterns, plus ONE vmapped
+    ``measure`` that drives every chip in a single step - bit-identical
+    to measuring each chip sequentially (both routes go through
+    :func:`repro.calib.device.measure_readout`; tested pin).
+    """
+
+    def __init__(self, chips: Sequence[VirtualChip]):
+        chips = list(chips)
+        if not chips:
+            raise ValueError("a fleet needs at least one chip")
+        c0 = chips[0]
+        for i, c in enumerate(chips):
+            if (c.k, c.n, c.chunk_rows) != (c0.k, c0.n, c0.chunk_rows):
+                raise ValueError(
+                    f"chip {i} grid ({c.k}, {c.n}) breaks the fleet's "
+                    f"uniform geometry ({c0.k}, {c0.n})"
+                )
+            if c.noise != c0.noise:
+                raise ValueError(f"chip {i} has a different noise model")
+            if sorted(c._fpn) != sorted(c0._fpn):
+                raise ValueError(
+                    f"chip {i} fixed-pattern keys {sorted(c._fpn)} != "
+                    f"{sorted(c0._fpn)}"
+                )
+        self.chips = chips
+
+    @classmethod
+    def build(
+        cls,
+        key: jax.Array,
+        n_chips: int,
+        *,
+        slots: int = 1,
+        chunk_rows: int = BSS2.signed_rows,
+        cols: int = BSS2.n_cols,
+        noise: NoiseConfig = NoiseConfig(),
+    ) -> "ChipFleet":
+        """``n_chips`` devices of ``slots`` chunk-slots each, every chip
+        seeded with its own hidden pattern (``fold_in(key, chip_id)``)."""
+        return cls([
+            VirtualChip(jax.random.fold_in(key, i),
+                        slots * chunk_rows, cols,
+                        noise=noise, chunk_rows=chunk_rows)
+            for i in range(n_chips)
+        ])
+
+    @classmethod
+    def for_placement(
+        cls,
+        key: jax.Array,
+        placement: Placement,
+        *,
+        noise: NoiseConfig = NoiseConfig(),
+    ) -> "ChipFleet":
+        return cls.build(
+            key, placement.n_chips, slots=placement.slots,
+            chunk_rows=placement.chunk_rows, cols=placement.cols,
+            noise=noise,
+        )
+
+    # ------------------------------------------------------------- basics
+    def __len__(self) -> int:
+        return len(self.chips)
+
+    def __getitem__(self, i: int) -> VirtualChip:
+        return self.chips[i]
+
+    def __iter__(self):
+        return iter(self.chips)
+
+    @property
+    def k(self) -> int:
+        return self.chips[0].k
+
+    @property
+    def n(self) -> int:
+        return self.chips[0].n
+
+    @property
+    def chunk_rows(self) -> int:
+        return self.chips[0].chunk_rows
+
+    @property
+    def n_chunks(self) -> int:
+        return self.chips[0].n_chunks
+
+    @property
+    def noise(self) -> NoiseConfig:
+        return self.chips[0].noise
+
+    @property
+    def measurements(self) -> int:
+        return sum(c.measurements for c in self.chips)
+
+    def kill(self, i: int) -> None:
+        self.chips[i].kill()
+
+    @property
+    def dead_mask(self) -> List[bool]:
+        return [c.dead for c in self.chips]
+
+    # ------------------------------------------------------------ measure
+    def measure(
+        self,
+        w_code: jax.Array,
+        a_code: jax.Array,
+        *,
+        gain: float = 1.0,
+    ) -> jax.Array:
+        """One fleet-wide measurement: the SAME weight/event codes on
+        every chip, each chip answering through its own hidden pattern
+        and readout-noise stream.  Returns [D, ..., C, N].
+
+        Per-chip measurement counters advance exactly as a sequential
+        sweep would (each chip's state is independent), so
+        ``fleet.measure(...)`` and ``[chip.measure(...) for chip in
+        fleet]`` produce bit-identical readouts - the vmap only removes
+        the Python loop.
+        """
+        w_code = jnp.asarray(w_code, jnp.float32)
+        a_code = jnp.asarray(a_code, jnp.float32)
+        if w_code.shape != (self.k, self.n):
+            raise ValueError(
+                f"w_code shape {w_code.shape} != fleet grid "
+                f"({self.k}, {self.n})"
+            )
+        if a_code.shape[-1] != self.k:
+            raise ValueError(
+                f"a_code feeds {a_code.shape[-1]} rows, fleet chips "
+                f"have {self.k}"
+            )
+        for c in self.chips:
+            c._measurements += 1
+        keys = jnp.stack([
+            jax.random.fold_in(c._key, c._measurements)
+            for c in self.chips
+        ])
+        fpn = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[c._fpn for c in self.chips]
+        )
+        drift = jnp.stack([c._drift for c in self.chips])
+        adc = jax.vmap(
+            lambda f, d, k_: _device.measure_readout(
+                w_code, a_code, gain=gain, fpn=f, drift=d, key=k_,
+                noise=self.noise, k=self.k, n=self.n,
+                chunk_rows=self.chunk_rows, n_chunks=self.n_chunks,
+            )
+        )(fpn, drift, keys)
+        dead = self.dead_mask
+        if any(dead):
+            mask = jnp.asarray(dead).reshape(
+                (len(self.chips),) + (1,) * (adc.ndim - 1)
+            )
+            adc = jnp.where(mask, float(BSS2.adc_min), adc)
+        return adc

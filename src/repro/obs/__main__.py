@@ -34,6 +34,8 @@ REQUIRED_EVENTS = (
     "serve.energy",
     "drift.probe",
     "drift.hot_swap",
+    "fleet.probe",
+    "fleet.remap",
 )
 REQUIRED_COUNTERS = (
     "exec.dispatches",
@@ -41,6 +43,7 @@ REQUIRED_COUNTERS = (
     "serve.plan_cache.miss",
     "serve.hot_swap",
     "drift.hot_swap",
+    "fleet.remap",
 )
 REQUIRED_HISTOGRAMS = (
     "serve.queue_us",
@@ -48,6 +51,7 @@ REQUIRED_HISTOGRAMS = (
     "serve.decode_us",
     "serve.batch_occupancy",
     "drift.lsb",
+    "fleet.drift_lsb",
 )
 
 
@@ -59,6 +63,9 @@ def serve_smoke(out_path: str) -> int:
     from repro import calib, obs
     from repro.configs.base import ArchConfig, RunConfig
     from repro.core.analog import AnalogConfig
+    from repro.core.noise import NOISELESS
+    from repro.fleet import (ChipFleet, FleetMonitor, calibrate_fleet,
+                             model_layer_shapes, model_snapshot, place_model)
     from repro.models import transformer as T
     from repro.serve.engine import Request, ServeEngine
 
@@ -88,6 +95,29 @@ def serve_smoke(out_path: str) -> int:
             # warm boot: the packed plan on disk is the executable
             ServeEngine(cfg, run_cfg, params, batch_size=2, max_len=32,
                         calibration=mon.snapshot, plan_cache=cache)
+            # fleet-backed boot (ISSUE 10): place the same LM across a
+            # chip fleet, serve, then force ONE chip failure so the
+            # probe heartbeat catches it and hot-swaps onto a spare -
+            # the fleet.remap event is part of the contract below.
+            frun = RunConfig(analog=AnalogConfig(mode="analog",
+                                                 chunk_rows=64))
+            pl = place_model(model_layer_shapes(spec, params),
+                             n_chips=19, spares=2, chunk_rows=64,
+                             cols=256)
+            fleet = ChipFleet.for_placement(jax.random.PRNGKey(5), pl,
+                                            noise=NOISELESS)
+            fsnap = calibrate_fleet(fleet, offset_repeats=4,
+                                    gain_repeats=1)
+            fmon = FleetMonitor(fleet, pl, fsnap, probe_repeats=4,
+                                spare_offset_repeats=4,
+                                spare_gain_repeats=1)
+            feng = ServeEngine(cfg, frun, params, batch_size=2,
+                               max_len=32,
+                               calibration=model_snapshot(pl, fsnap),
+                               fleet=fmon)
+            feng.serve([Request(4, prompt, 2)])
+            fleet.kill(pl.assignments[0].chip)
+            feng.serve([Request(5, prompt, 2)])
 
     records = report.records_of(tr, obs.registry())
     report.dump_run(out_path, tr, obs.registry())
@@ -108,6 +138,11 @@ def serve_smoke(out_path: str) -> int:
     if len(hot_swaps) != 1:
         missing.append(f"event:drift.hot_swap (want exactly 1, got "
                        f"{len(hot_swaps)})")
+    remaps = [r for r in records if r.get("rec") == "event"
+              and r["name"] == "fleet.remap"]
+    if len(remaps) != 1:
+        missing.append(f"event:fleet.remap (want exactly 1, got "
+                       f"{len(remaps)})")
     if missing:
         print("MISSING telemetry:\n  " + "\n  ".join(missing))
         return 1

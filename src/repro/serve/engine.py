@@ -41,7 +41,8 @@ class ServeEngine:
                  batch_size: int = 8, max_len: int = 512,
                  greedy: bool = True, seed: int = 0,
                  prelower: bool = True, calibration=None,
-                 drift_monitor=None, plan_cache: Optional[str] = None):
+                 drift_monitor=None, plan_cache: Optional[str] = None,
+                 fleet=None):
         self.cfg, self.run = cfg, run
         # Serving is inference against frozen weights: compile the model
         # ONCE through the api front door (quantized effective weights,
@@ -73,8 +74,14 @@ class ServeEngine:
         # otherwise the engine compiles as usual and writes the cache
         # for the next boot.  The cache stores the bake of THESE params:
         # after a weight update, delete the file (or pass a new path).
+        # Fleet (ISSUE 10): `fleet` is a repro.fleet.FleetMonitor; its
+        # probe heartbeat runs between batches next to the drift check,
+        # and a dead chip triggers remap() - the spare's freshly
+        # calibrated tables hot-swap into the served plans exactly like
+        # a drift refresh (value-only; executables reused).
         self.model = None
         self.drift_monitor = drift_monitor
+        self.fleet = fleet
         step_kw = {}
         if prelower and run.analog.mode != "digital":
             with obs_trace.span("serve.compile", model=cfg.name) as _sp:
@@ -149,6 +156,28 @@ class ServeEngine:
         obs_metrics.counter("serve.hot_swap").inc()
         return True
 
+    def maybe_remap(self) -> bool:
+        """Fleet-health hook (called between batches): probe every chip
+        and, when one died, remap its chunks onto a spare and hot-swap
+        the re-gathered tables into the served plans.  Returns True iff
+        a remap happened."""
+        if self.fleet is None or self.model is None:
+            return False
+        model = self.fleet.maybe_remap(self.model)
+        if model is None:
+            return False
+        with obs_trace.span("serve.hot_swap", reason="fleet.remap"):
+            self.model = model
+            swapped = self.model.lower()
+            if shd.get_mesh() is not None:
+                swapped = jax.device_put(
+                    swapped,
+                    shd.sharding_like(self.model.sharding_specs(), swapped),
+                )
+            self.params = swapped
+        obs_metrics.counter("serve.hot_swap").inc()
+        return True
+
     def run_batch(self, requests: list[Request]) -> list[Request]:
         """Serve one group of <= batch_size requests to completion.
 
@@ -163,6 +192,7 @@ class ServeEngine:
         """
         assert len(requests) <= self.batch_size
         self.maybe_recalibrate()
+        self.maybe_remap()
         b = len(requests)
         t_start = obs_trace.clock_us()
         for r in requests:

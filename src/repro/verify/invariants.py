@@ -129,6 +129,11 @@ class _Ctx:
     # expert axis (batch_concat / expert_stack), so geometry rules allow
     # one more leading axis than a plain layer
     fused_paths: set = dataclasses.field(default_factory=set)
+    # fleet context (repro.fleet): a Placement unlocks the
+    # placement-coverage rule, a FleetSnapshot the fleet-calibration
+    # compatibility rule
+    placement: Any = None
+    fleet: Any = None
 
 
 def _collect(ctx: _Ctx, node, path: str) -> None:
@@ -563,27 +568,43 @@ def _calibration_compat(ctx: _Ctx):
             if t is None:
                 continue
             ts = tuple(_shape(t))
-            if len(ts) != 2:
+            if len(ts) not in (2, 3):
                 yield Diagnostic(
                     "calibration-compat",
                     f"calibration[{name!r}].{field}",
-                    f"{field} must be a [chunks, N] table; got shape "
+                    f"{field} must be a [chunks, N] table (or a "
+                    f"per-stack-member [S, chunks, N] table); got shape "
                     f"{ts}",
                     "measure per-(chunk, column) tables",
                 )
-            elif lp is not None and getattr(
-                lp.store.codes, "ndim", 2
-            ) == 2:
-                n_chunks = int(lp.store.codes.shape[-2]) // lp.chunk_rows
-                if ts != (n_chunks, lp.n):
-                    yield Diagnostic(
-                        "calibration-compat",
-                        f"calibration[{name!r}].{field}",
-                        f"{field} shape {ts} does not match the "
-                        f"({n_chunks}, {lp.n}) chunk grid of the "
-                        "lowered layer",
-                        "re-measure against the current geometry",
-                    )
+                continue
+            if lp is None:
+                continue
+            nd = getattr(lp.store.codes, "ndim", 2)
+            n_chunks = int(lp.store.codes.shape[-2]) // lp.chunk_rows
+            if len(ts) == 2 and nd == 2:
+                want = (n_chunks, lp.n)
+            elif len(ts) == 3 and nd == 3:
+                want = (int(lp.store.codes.shape[0]), n_chunks, lp.n)
+            else:
+                yield Diagnostic(
+                    "calibration-compat",
+                    f"calibration[{name!r}].{field}",
+                    f"{field} rank {len(ts)} does not match the lowered "
+                    f"layer (codes ndim={nd}): a scan-stacked layer "
+                    "takes [S, chunks, N] tables, a plain layer "
+                    "[chunks, N]",
+                    "re-measure against the current geometry",
+                )
+                continue
+            if ts != want:
+                yield Diagnostic(
+                    "calibration-compat",
+                    f"calibration[{name!r}].{field}",
+                    f"{field} shape {ts} does not match the "
+                    f"{want} chunk grid of the lowered layer",
+                    "re-measure against the current geometry",
+                )
     # fused groups calibrated under ONE shared input LSB
     if spec is not None:
         import numpy as np
@@ -609,6 +630,167 @@ def _calibration_compat(ctx: _Ctx):
                     "fit the group with "
                     "calib.routines.share_group_input_scale",
                 )
+
+
+@rule("placement-coverage", cheap=True)
+def _placement_coverage(ctx: _Ctx):
+    """A fleet Placement books every layer tile exactly once on a
+    serving chip: chip/slot ids inside the fleet grid, no (chip, slot)
+    double-booked, the spare pool empty, per-layer sites matching the
+    plan_tiles grid of the declared shapes, and placed shapes agreeing
+    with the name-matched lowered layers."""
+    pl = ctx.placement
+    if pl is None:
+        return
+    from repro.fleet.placement import _layer_sites
+
+    spares = set(pl.spares)
+    booked: Dict[tuple, str] = {}
+    for a in pl.assignments:
+        apath = (f"placement[{a.layer!r}]"
+                 f"[s{a.stack},c{a.chunk},t{a.coltile}]")
+        if not (0 <= a.chip < pl.n_chips and 0 <= a.slot < pl.slots):
+            yield Diagnostic(
+                "placement-coverage", apath,
+                f"(chip {a.chip}, slot {a.slot}) lies outside the fleet "
+                f"grid [0, {pl.n_chips}) x [0, {pl.slots})",
+                "re-place with fleet.place_model",
+            )
+            continue
+        if a.chip in spares:
+            yield Diagnostic(
+                "placement-coverage", apath,
+                f"tile assigned to spare chip {a.chip}",
+                "spares stay empty until remap() promotes them",
+            )
+        key = (a.chip, a.slot)
+        if key in booked:
+            yield Diagnostic(
+                "placement-coverage", apath,
+                f"(chip {a.chip}, slot {a.slot}) is double-booked "
+                f"(also holds {booked[key]})",
+                "one tile per chunk slot",
+            )
+        else:
+            booked[key] = apath
+    # exact site coverage: every tile of every declared shape, once
+    placed: Dict[str, set] = {}
+    for a in pl.assignments:
+        placed.setdefault(a.layer, set()).add(a.site)
+    for name, shape in pl.shapes:
+        want = set(_layer_sites(
+            name, shape, chunk_rows=pl.chunk_rows, cols=pl.cols))
+        got = placed.pop(name, set())
+        missing, extra = want - got, got - want
+        if missing or extra:
+            yield Diagnostic(
+                "placement-coverage", f"placement[{name!r}]",
+                f"tile set diverges from the plan_tiles grid of shape "
+                f"{shape}: {len(missing)} site(s) missing, "
+                f"{len(extra)} unknown",
+                "place every (stack, chunk, coltile) site exactly once",
+            )
+    for name in sorted(placed):
+        yield Diagnostic(
+            "placement-coverage", f"placement[{name!r}]",
+            "assignments exist for a layer absent from placement.shapes",
+            "build placements from the model's layer shapes "
+            "(fleet.model_layer_shapes)",
+        )
+    # placed shapes agree with the name-matched lowered layers
+    by_name: Dict[str, LayerPlan] = {}
+    spec = ctx.spec
+    if spec is not None and getattr(spec, "kind", None) == "stack":
+        for (ppath, plan) in ctx.plans[:1]:
+            for l, lp in zip(spec.layers, plan.layers):
+                by_name[l.name] = lp
+    for path, lp in ctx.layers:
+        if path.endswith("._plan"):
+            by_name.setdefault(path[: -len("._plan")], lp)
+    for name, shape in pl.shapes:
+        lp = by_name.get(name)
+        if lp is None:
+            continue
+        nd = getattr(lp.store.codes, "ndim", 2)
+        if (len(shape) == 3) != (nd == 3):
+            yield Diagnostic(
+                "placement-coverage", f"placement[{name!r}]",
+                f"placed shape {shape} and the lowered layer "
+                f"(codes ndim={nd}) disagree on scan-stacking",
+                "re-place from the compiled model's layer shapes",
+            )
+            continue
+        if shape[-1] != lp.n:
+            yield Diagnostic(
+                "placement-coverage", f"placement[{name!r}]",
+                f"placed shape {shape} has {shape[-1]} columns, the "
+                f"lowered layer {lp.n}",
+                "re-place from the compiled model's layer shapes",
+            )
+        elif pl.chunk_rows == lp.chunk_rows:
+            want_chunks = -(-shape[-2] // pl.chunk_rows)
+            got_chunks = int(lp.store.codes.shape[-2]) // lp.chunk_rows
+            if want_chunks != got_chunks:
+                yield Diagnostic(
+                    "placement-coverage", f"placement[{name!r}]",
+                    f"placed shape {shape} spans {want_chunks} row "
+                    f"chunks, the lowered layer {got_chunks}",
+                    "re-place from the compiled model's layer shapes",
+                )
+
+
+@rule("fleet-calibration-compat", cheap=True)
+def _fleet_calibration_compat(ctx: _Ctx):
+    """A FleetSnapshot is servable: known fleet format version, 3-D
+    [chips, chunks, N] gain/offset tables of one shape, and - when a
+    Placement is present - enough chips, chunk slots and columns to
+    cover the placement grid."""
+    fs = ctx.fleet
+    if fs is None:
+        return
+    from repro.fleet.calibrate import FLEET_FORMAT_VERSION
+
+    if getattr(fs, "version", FLEET_FORMAT_VERSION) != FLEET_FORMAT_VERSION:
+        yield Diagnostic(
+            "fleet-calibration-compat", "fleet.version",
+            f"fleet snapshot format {fs.version!r} is not "
+            f"{FLEET_FORMAT_VERSION!r}",
+            "re-measure or migrate the snapshot",
+        )
+    gs, os_ = _shape(fs.gain_table), _shape(fs.chunk_offset)
+    if gs is None or os_ is None or len(gs) != 3 or gs != os_:
+        yield Diagnostic(
+            "fleet-calibration-compat", "fleet.gain_table",
+            f"fleet tables must be one [chips, chunks, N] pair; got "
+            f"gain {gs} / offset {os_}",
+            "calibrate with fleet.calibrate_fleet",
+        )
+        return
+    pl = ctx.placement
+    if pl is None:
+        return
+    d, c, n = gs
+    if d < pl.n_chips:
+        yield Diagnostic(
+            "fleet-calibration-compat", "fleet.gain_table",
+            f"snapshot covers {d} chips, the placement addresses "
+            f"{pl.n_chips}",
+            "calibrate the whole fleet, spares included",
+        )
+    if c < pl.slots:
+        yield Diagnostic(
+            "fleet-calibration-compat", "fleet.gain_table",
+            f"snapshot has {c} chunk slots per chip, the placement "
+            f"packs {pl.slots}",
+            "fleet chips must expose every placed slot",
+        )
+    if n < pl.cols:
+        yield Diagnostic(
+            "fleet-calibration-compat", "fleet.gain_table",
+            f"snapshot has {n} columns per chip, the placement tiles "
+            f"{pl.cols}-wide",
+            "fleet chips must expose every placed column",
+        )
 
 
 # --------------------------------------------------------------------------
@@ -816,7 +998,8 @@ def _packed_layout(ctx: _Ctx):
 # --------------------------------------------------------------------------
 def verify_plan(lowered, *, spec=None, calibration=None,
                 cheap_only: bool = False, path: str = "plan",
-                rules: Optional[Tuple[str, ...]] = None
+                rules: Optional[Tuple[str, ...]] = None,
+                placement=None, fleet=None
                 ) -> Tuple[Diagnostic, ...]:
     """Run the invariant rules over a lowered artifact (an
     :class:`~repro.exec.plan.AnalogPlan`, a pre-lowered params tree, a
@@ -826,8 +1009,12 @@ def verify_plan(lowered, *, spec=None, calibration=None,
     ``cheap_only`` restricts to the trace-safe shape/static rules (what
     ``api.compile(..., verify=True)`` runs); ``rules`` names a subset
     explicitly.  ``spec`` / ``calibration`` unlock the spec-aware checks
-    (sharding coverage, snapshot compatibility)."""
-    ctx = _Ctx(lowered=lowered, spec=spec, calibration=calibration)
+    (sharding coverage, snapshot compatibility); ``placement`` (a
+    :class:`repro.fleet.Placement`) and ``fleet`` (a
+    :class:`repro.fleet.FleetSnapshot`) unlock the fleet rules
+    (placement-coverage, fleet-calibration-compat)."""
+    ctx = _Ctx(lowered=lowered, spec=spec, calibration=calibration,
+               placement=placement, fleet=fleet)
     _collect(ctx, lowered, path)
     out: List[Diagnostic] = []
     for r in RULES.values():

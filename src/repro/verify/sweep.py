@@ -114,6 +114,50 @@ def sweep_plans(log: Callable[[str], None] = _silent
     return tuple(out)
 
 
+def sweep_fleet(log: Callable[[str], None] = _silent
+                ) -> Tuple[Diagnostic, ...]:
+    """Fleet rules over a placed, fleet-calibrated compiled plan: the
+    ecg stack placed across a 6-chip fleet (2 spares), calibrated
+    fleet-wide and baked through ``api.compile(calibration=)`` - this is
+    the CI entry that exercises ``placement-coverage`` and
+    ``fleet-calibration-compat`` alongside the plan rules."""
+    from repro import api
+    from repro.core.analog import AnalogConfig
+    from repro.core.noise import NOISELESS
+    from repro.fleet import (
+        ChipFleet,
+        calibrate_fleet,
+        model_layer_shapes,
+        model_snapshot,
+        place_model,
+    )
+    from repro.models import ecg as ECG
+    from repro.verify.invariants import verify_plan
+
+    key = jax.random.PRNGKey(0)
+    cfg = ECG.ECGConfig()
+    params = ECG.ecg_init(key, cfg)
+    spec = ECG.ecg_module_spec(cfg)
+    pl = place_model(model_layer_shapes(spec, params),
+                     n_chips=6, spares=2)
+    fleet = ChipFleet.for_placement(
+        jax.random.PRNGKey(1), pl, noise=NOISELESS)
+    fsnap = calibrate_fleet(fleet, offset_repeats=4, gain_repeats=1,
+                            source="verify-sweep")
+    model = api.compile(
+        spec, params,
+        AnalogConfig(act_calib="static", signed_input="none",
+                     noise=NOISELESS),
+        calibration=model_snapshot(pl, fsnap, source="verify-sweep"),
+    )
+    diags = verify_plan(
+        model.lowered, spec=model.spec, calibration=model.calibration,
+        placement=pl, fleet=fsnap, path="fleet-plan",
+    )
+    log(f"fleet ecg/placed: {len(diags)} diagnostic(s)")
+    return tuple(diags)
+
+
 def sweep(log: Callable[[str], None] = _silent) -> Tuple[Diagnostic, ...]:
-    """The full invariant sweep (specs + compiled plans)."""
-    return sweep_specs(log) + sweep_plans(log)
+    """The full invariant sweep (specs + compiled plans + placed fleet)."""
+    return sweep_specs(log) + sweep_plans(log) + sweep_fleet(log)

@@ -1,0 +1,487 @@
+"""repro.fleet: placement, vmapped fleet calibration, failure remap.
+
+Acceptance pins of ISSUE 10:
+- deterministic placement (same shapes + knobs -> the identical object);
+- vmapped fleet measurement/calibration bit-exact vs the sequential
+  per-chip Python loop;
+- blind fleet calibration recovers every chip's hidden pattern (sub-LSB
+  offsets, <3% gain);
+- FleetSnapshot .npz round-trip + version gate;
+- kill-a-chip -> remap() -> serve output bit-exact on a spare while the
+  jitted executables are reused (lowering_count counts only the moved
+  chunks, jit cache size stays 1);
+- the placement-coverage / fleet-calibration-compat verify rules;
+- the DriftMonitor background gain sweep;
+- probe-based fleet health feeding the elastic mesh.
+"""
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.calib.monitor import DriftMonitor
+from repro.calib.routines import calibrate_chip, null_offsets
+from repro.calib.device import VirtualChip
+from repro.calib.snapshot import CalibrationSnapshot, LayerCalibration
+from repro.core.analog import AnalogConfig
+from repro.core.noise import NOISELESS, NoiseConfig
+from repro.fleet import (
+    ChipFleet,
+    FleetMonitor,
+    FleetSnapshot,
+    calibrate_fleet,
+    fleet_null_offsets,
+    model_layer_shapes,
+    model_snapshot,
+    place_model,
+)
+from repro.fleet.placement import _layer_sites
+from repro.models import ecg as ECG
+
+lower_mod = importlib.import_module("repro.exec.lower")
+run_mod = importlib.import_module("repro.exec.run")
+
+KEY = jax.random.PRNGKey(0)
+
+SHAPES = [("a", (256, 40)), ("b", (2, 128, 16)), ("c", (100, 300))]
+
+
+def _fresh_fleet(key=KEY, n=3, noise=None):
+    return ChipFleet.build(
+        key, n, slots=2, chunk_rows=64, cols=32,
+        noise=NoiseConfig() if noise is None else noise,
+    )
+
+
+class TestPlacement:
+    def test_deterministic(self):
+        a = place_model(SHAPES, n_chips=8, spares=2,
+                        chunk_rows=64, cols=128)
+        b = place_model(SHAPES, n_chips=8, spares=2,
+                        chunk_rows=64, cols=128)
+        assert a == b                      # frozen all-meta: deep equality
+        c = place_model(SHAPES, n_chips=9, spares=2,
+                        chunk_rows=64, cols=128)
+        assert a != c
+
+    def test_exact_site_coverage_and_empty_spares(self):
+        pl = place_model(SHAPES, n_chips=8, spares=2,
+                         chunk_rows=64, cols=128)
+        want = {
+            s for name, shape in SHAPES
+            for s in _layer_sites(name, shape, chunk_rows=64, cols=128)
+        }
+        assert {a.site for a in pl.assignments} == want
+        assert len(pl.assignments) == len(want)
+        for s in pl.spares:
+            assert not pl.assignments_on(s)
+        booked = [(a.chip, a.slot) for a in pl.assignments]
+        assert len(set(booked)) == len(booked)
+
+    def test_capacity_errors(self):
+        with pytest.raises(ValueError, match="capacity"):
+            place_model(SHAPES, n_chips=3, spares=1, slots=1,
+                        chunk_rows=64, cols=128)
+        with pytest.raises(ValueError, match="serving"):
+            place_model(SHAPES, n_chips=2, spares=2)
+
+    def test_remap_moves_only_dead_chip(self):
+        pl = place_model(SHAPES, n_chips=8, spares=2,
+                         chunk_rows=64, cols=128)
+        dead = pl.assignments[0].chip
+        new, moved = pl.remap(dead)
+        assert {a.site for a in moved} == {
+            a.site for a in pl.assignments_on(dead)
+        }
+        assert not new.assignments_on(dead)
+        spare = moved[0].chip
+        assert spare in pl.spares and spare not in new.spares
+        # untouched assignments are identical objects
+        untouched = {a.site: a for a in pl.assignments
+                     if a.chip != dead}
+        for a in new.assignments:
+            if a.site in untouched:
+                assert a == untouched[a.site]
+        with pytest.raises(ValueError, match="spare pool"):
+            pl.remap(dead, spare=dead)
+
+    def test_remap_exhausts_spares(self):
+        pl = place_model(SHAPES, n_chips=7, spares=1,
+                         chunk_rows=64, cols=128)
+        new, _ = pl.remap(pl.assignments[0].chip)
+        assert new.spares == ()
+        with pytest.raises(ValueError, match="no spare"):
+            new.remap(new.assignments[0].chip)
+
+
+class TestFleetMeasure:
+    def test_vmapped_equals_sequential_bit_exact(self):
+        fa, fb = _fresh_fleet(), _fresh_fleet()
+        w = jnp.asarray(
+            jax.random.randint(KEY, (fa.k, fa.n), -63, 64), jnp.float32
+        )
+        a = jnp.asarray(
+            jax.random.randint(jax.random.fold_in(KEY, 1),
+                               (5, fa.k), 0, 31), jnp.float32
+        )
+        adc = fa.measure(w, a)
+        seq = jnp.stack([c.measure(w, a) for c in fb.chips])
+        assert adc.shape == (3, 5, fa.n_chunks, fa.n)
+        assert (adc == seq).all()
+
+    def test_distinct_hidden_patterns(self):
+        fleet = _fresh_fleet()
+        off = fleet_null_offsets(fleet, repeats=16)
+        assert not jnp.allclose(off[0], off[1])
+
+    def test_dead_chip_rails_to_adc_min(self):
+        from repro.core.hw import BSS2
+
+        fleet = _fresh_fleet()
+        fleet.kill(1)
+        assert fleet.dead_mask == [False, True, False]
+        adc = fleet.measure(
+            jnp.zeros((fleet.k, fleet.n)), jnp.zeros((2, fleet.k))
+        )
+        assert (adc[1] == BSS2.adc_min).all()
+        assert not (adc[0] == BSS2.adc_min).all()
+
+
+class TestFleetCalibration:
+    def test_vmapped_equals_per_chip_bit_exact(self):
+        fa, fb = _fresh_fleet(), _fresh_fleet()
+        snap = calibrate_fleet(fa, offset_repeats=8, gain_repeats=2)
+        for i, chip in enumerate(fb.chips):
+            rec = calibrate_chip(chip, offset_repeats=8, gain_repeats=2)
+            assert (snap.chip(i).gain_table == rec.gain_table).all()
+            assert (snap.chip(i).chunk_offset == rec.chunk_offset).all()
+
+    def test_blind_recovery_every_chip(self):
+        fleet = ChipFleet.build(KEY, 4, slots=2, chunk_rows=64, cols=32,
+                                noise=NoiseConfig())
+        snap = calibrate_fleet(fleet)
+        for i, chip in enumerate(fleet.chips):
+            truth = chip.oracle()
+            off = np.abs(np.asarray(
+                snap.chunk_offset[i] - truth["chunk_offset"]
+            ))
+            assert off.max() < 0.5          # sub-LSB, every (chunk, col)
+            rel = np.abs(np.asarray(
+                (snap.gain_table[i] - truth["gain_table"])
+                / truth["gain_table"]
+            ))
+            assert rel.max() < 0.03
+
+
+class TestFleetSnapshot:
+    def _snap(self):
+        fleet = _fresh_fleet()
+        return calibrate_fleet(fleet, offset_repeats=4, gain_repeats=1,
+                               source="unit")
+
+    def test_npz_round_trip_bit_exact(self, tmp_path):
+        snap = self._snap()
+        p = tmp_path / "fleet.npz"
+        snap.save(p)
+        back = FleetSnapshot.load(p)
+        assert (back.gain_table == snap.gain_table).all()
+        assert (back.chunk_offset == snap.chunk_offset).all()
+        assert back.version == snap.version
+        assert back.source == "unit"
+
+    def test_version_gate(self, tmp_path):
+        snap = self._snap()
+        p = tmp_path / "fleet.npz"
+        snap.save(p)
+        z = dict(np.load(p, allow_pickle=False))
+        z["__version__"] = np.asarray("repro-fleet-v0")
+        with open(p, "wb") as f:
+            np.savez(f, **z)
+        with pytest.raises(ValueError, match="format"):
+            FleetSnapshot.load(p)
+
+    def test_with_chip_touches_one_chip(self):
+        snap = self._snap()
+        rec = LayerCalibration(
+            gain_table=jnp.full_like(snap.gain_table[1], 2.0),
+            chunk_offset=jnp.zeros_like(snap.chunk_offset[1]),
+        )
+        out = snap.with_chip(1, rec)
+        assert (out.gain_table[1] == 2.0).all()
+        assert (out.gain_table[0] == snap.gain_table[0]).all()
+        assert (out.chunk_offset[2] == snap.chunk_offset[2]).all()
+
+
+def _ecg_fleet(key=KEY, twin_spare=False):
+    """ECG placed on a 6-chip fleet (2 spares), fleet-calibrated."""
+    cfg = ECG.ECGConfig()
+    params = ECG.ecg_init(KEY, cfg)
+    spec = ECG.ecg_module_spec(cfg)
+    pl = place_model(model_layer_shapes(spec, params),
+                     n_chips=6, spares=2)
+    chips = [
+        VirtualChip(jax.random.fold_in(key, i),
+                    pl.slots * pl.chunk_rows, pl.cols,
+                    noise=NoiseConfig(readout_std=0.0),
+                    chunk_rows=pl.chunk_rows)
+        for i in range(pl.n_chips)
+    ]
+    if twin_spare:
+        # spare 4 carries the SAME hidden pattern as serving chip 0
+        chips[4] = VirtualChip(
+            jax.random.fold_in(key, 0),
+            pl.slots * pl.chunk_rows, pl.cols,
+            noise=NoiseConfig(readout_std=0.0), chunk_rows=pl.chunk_rows,
+        )
+    fleet = ChipFleet(chips)
+    fsnap = calibrate_fleet(fleet, offset_repeats=8, gain_repeats=2)
+    acfg = AnalogConfig(act_calib="static", signed_input="none",
+                        noise=NOISELESS)
+    model = api.compile(spec, params, acfg,
+                        calibration=model_snapshot(pl, fsnap))
+    return model, pl, fleet, fsnap
+
+
+class TestRemapHotSwap:
+    def test_kill_remap_reuses_executables(self):
+        model, pl, fleet, fsnap = _ecg_fleet()
+        x = jax.random.normal(KEY, (2, 2, 126))
+        cfg = ECG.ECGConfig()
+        cols = ECG._im2col(x, cfg.conv_taps, cfg.conv_stride)
+        f = jax.jit(lambda plan, xx: run_mod.run(plan, xx))
+        y0 = f(model.lowered, cols)
+        dead = pl.assignments[0].chip
+        n_moved = len(pl.assignments_on(dead))
+        fleet.kill(dead)
+
+        mon = FleetMonitor(fleet, pl, fsnap, probe_repeats=4,
+                           spare_offset_repeats=8, spare_gain_repeats=2)
+        assert mon.dead_chips() == [dead]        # blind detection
+        lower_mod.reset_lowering_count()
+        new_model = mon.maybe_remap(model)
+        assert new_model is not None
+        assert mon.remaps == 1
+        # only the moved chunks were re-lowered
+        assert lower_mod.lowering_count() == n_moved
+        # treedef-invariant hot-swap: the jitted replay is reused
+        assert jax.tree_util.tree_structure(
+            model.lowered
+        ) == jax.tree_util.tree_structure(new_model.lowered)
+        y1 = f(new_model.lowered, cols)
+        assert f._cache_size() == 1
+        # hot-swap == full recompile of the remapped snapshot, bit-exact
+        full = api.compile(model.spec, model.params, model.run_cfg,
+                           calibration=new_model.calibration)
+        assert (new_model.apply(x) == full.apply(x)).all()
+        assert y1.shape == y0.shape
+
+    def test_twin_spare_restores_bit_exact_output(self):
+        model, pl, fleet, fsnap = _ecg_fleet(twin_spare=True)
+        x = jax.random.normal(KEY, (2, 2, 126))
+        y0 = model.apply(x)
+        dead = 0
+        assert pl.assignments_on(dead)
+        fleet.kill(dead)
+        mon = FleetMonitor(fleet, pl, fsnap, probe_repeats=4,
+                           spare_offset_repeats=8, spare_gain_repeats=2)
+        new_model = mon.remap(model, dead)
+        # the promoted spare measures the identical hidden pattern
+        # (readout_std=0 makes recalibration deterministic), so serving
+        # output is literally bit-exact vs pre-failure
+        assert (new_model.apply(x) == y0).all()
+
+    def test_remap_requires_calibrated_model(self):
+        model, pl, fleet, fsnap = _ecg_fleet()
+        bare = dataclasses.replace(model, calibration=None)
+        mon = FleetMonitor(fleet, pl, fsnap)
+        with pytest.raises(ValueError, match="calibration"):
+            mon.remap(bare, 0)
+
+
+class TestVerifyFleetRules:
+    def test_rules_pass_on_placed_model(self):
+        from repro.verify.invariants import verify_plan
+
+        model, pl, fleet, fsnap = _ecg_fleet()
+        diags = verify_plan(
+            model.lowered, spec=model.spec,
+            calibration=model.calibration, placement=pl, fleet=fsnap,
+        )
+        assert not diags, diags
+
+    def test_placement_coverage_fires(self):
+        from repro.verify.invariants import verify_plan
+
+        model, pl, fleet, fsnap = _ecg_fleet()
+        # a dropped tile
+        bad = dataclasses.replace(pl, assignments=pl.assignments[:-1])
+        diags = verify_plan(model.lowered, spec=model.spec, placement=bad)
+        assert any(d.rule == "placement-coverage" for d in diags)
+        # a tile parked on a spare
+        parked = dataclasses.replace(pl, assignments=pl.assignments[:-1] + (
+            dataclasses.replace(pl.assignments[-1], chip=pl.spares[0]),
+        ))
+        diags = verify_plan(model.lowered, placement=parked)
+        assert any("spare" in d.message for d in diags
+                   if d.rule == "placement-coverage")
+
+    def test_fleet_calibration_compat_fires(self):
+        from repro.verify.invariants import verify_plan
+
+        model, pl, fleet, fsnap = _ecg_fleet()
+        stale = dataclasses.replace(fsnap, version="repro-fleet-v0")
+        diags = verify_plan(model.lowered, fleet=stale)
+        assert any(d.rule == "fleet-calibration-compat" for d in diags)
+        short = dataclasses.replace(
+            fsnap, gain_table=fsnap.gain_table[:2],
+            chunk_offset=fsnap.chunk_offset[:2],
+        )
+        diags = verify_plan(model.lowered, placement=pl, fleet=short)
+        assert any("chips" in d.message for d in diags
+                   if d.rule == "fleet-calibration-compat")
+
+
+class TestStackedFleetBake:
+    def test_scan_stacked_tables_bake_and_swap(self):
+        """A scan-stacked LM tree placed per physical device: [S, C, N]
+        tables compile (stacked joint-vmap bake) and remap hot-swap ==
+        full recompile, bit-exact."""
+        from repro.configs.base import ArchConfig, RunConfig
+        from repro.models import transformer as T
+
+        cfg = ArchConfig("fleet-t", "dense", n_layers=2, d_model=64,
+                         n_heads=4, n_kv_heads=2, d_ff=128,
+                         vocab_size=256)
+        run = RunConfig(analog=AnalogConfig(mode="analog", chunk_rows=64))
+        params = T.lm_init(KEY, cfg)
+        spec = T.lm_module_spec(cfg, params)
+        pl = place_model(model_layer_shapes(spec, params),
+                         n_chips=19, spares=2, chunk_rows=64, cols=256)
+        fleet = ChipFleet.for_placement(jax.random.PRNGKey(3), pl,
+                                        noise=NOISELESS)
+        fsnap = calibrate_fleet(fleet, offset_repeats=4, gain_repeats=1)
+        model = api.compile(spec, params, run,
+                            calibration=model_snapshot(pl, fsnap))
+        toks = jnp.zeros((1, 4), jnp.int32)
+        model.apply({"tokens": toks})
+        victim = next(a.chip for a in pl.assignments if a.stack >= 0)
+        fleet.kill(victim)
+        mon = FleetMonitor(fleet, pl, fsnap, probe_repeats=4,
+                           spare_offset_repeats=4, spare_gain_repeats=1)
+        lower_mod.reset_lowering_count()
+        new_model = mon.maybe_remap(model)
+        assert new_model is not None
+        assert lower_mod.lowering_count() == len(
+            pl.assignments_on(victim)
+        )
+        assert jax.tree_util.tree_structure(
+            model.lowered
+        ) == jax.tree_util.tree_structure(new_model.lowered)
+        full = api.compile(spec, params, run,
+                           calibration=new_model.calibration)
+        y_hot = new_model.apply({"tokens": toks})
+        y_full = full.apply({"tokens": toks})
+        eq = jax.tree.map(
+            lambda a, b: bool((a == b).all()), y_hot, y_full
+        )
+        assert all(jax.tree.leaves(eq))
+
+
+class TestServeEngineFleet:
+    def test_engine_remaps_between_batches(self):
+        from repro.configs.base import ArchConfig, RunConfig
+        from repro.models import transformer as T
+        from repro.serve.engine import Request, ServeEngine
+
+        cfg = ArchConfig("fleet-serve", "dense", n_layers=2, d_model=64,
+                         n_heads=4, n_kv_heads=2, d_ff=128,
+                         vocab_size=256)
+        run = RunConfig(analog=AnalogConfig(mode="analog", chunk_rows=64))
+        params = T.lm_init(KEY, cfg)
+        spec = T.lm_module_spec(cfg, params)
+        pl = place_model(model_layer_shapes(spec, params),
+                         n_chips=19, spares=2, chunk_rows=64, cols=256)
+        fleet = ChipFleet.for_placement(jax.random.PRNGKey(5), pl,
+                                        noise=NOISELESS)
+        fsnap = calibrate_fleet(fleet, offset_repeats=4, gain_repeats=1)
+        snap = model_snapshot(pl, fsnap)
+        mon = FleetMonitor(fleet, pl, fsnap, probe_repeats=4,
+                           spare_offset_repeats=4, spare_gain_repeats=1)
+        eng = ServeEngine(cfg, run, params, batch_size=2, max_len=32,
+                          calibration=snap, fleet=mon)
+        reqs = [Request(uid=0, prompt=np.array([1, 2, 3], np.int32),
+                        max_new_tokens=2)]
+        eng.serve(reqs)
+        assert mon.remaps == 0                # healthy fleet: no remap
+        fleet.kill(pl.assignments[0].chip)
+        out = eng.serve([Request(
+            uid=1, prompt=np.array([4, 5], np.int32), max_new_tokens=2
+        )])
+        assert mon.remaps == 1                # probe caught the failure
+        assert out[0].output is not None and len(out[0].output) == 2
+
+
+class TestDriftMonitorGainSweep:
+    def _chip_and_snapshot(self):
+        chip = VirtualChip(KEY, 256, 16,
+                           noise=NoiseConfig(readout_std=0.0))
+        snap = CalibrationSnapshot().with_layer("l", LayerCalibration(
+            gain_table=jnp.ones((chip.n_chunks, chip.n)),
+            chunk_offset=null_offsets(chip, repeats=4),
+        ))
+        return chip, snap
+
+    def test_round_robin_covers_every_chunk(self):
+        chip, snap = self._chip_and_snapshot()
+        mon = DriftMonitor({"l": chip}, snap, gain_sweep=True,
+                           gain_repeats=2)
+        probed = [mon.sweep_gain_chunk() for _ in range(chip.n_chunks)]
+        assert probed == [("l", 0), ("l", 1)]
+        assert mon.sweep_gain_chunk() == ("l", 0)   # wraps around
+
+    def test_refresh_folds_staged_gains(self):
+        chip, snap = self._chip_and_snapshot()
+        mon = DriftMonitor({"l": chip}, snap, gain_sweep=True,
+                           gain_repeats=4)
+        for _ in range(chip.n_chunks):
+            mon.sweep_gain_chunk()
+        out = mon.refresh()
+        rec = out.layer("l")
+        truth = chip.oracle()["gain_table"]
+        rel = np.abs(np.asarray((rec.gain_table - truth) / truth))
+        assert rel.max() < 0.03       # ones -> fitted, via the hot-swap
+        assert not mon._pending_gains
+
+    def test_sweep_off_by_default(self):
+        chip, snap = self._chip_and_snapshot()
+        mon = DriftMonitor({"l": chip}, snap)
+        assert mon.maybe_refresh() is None
+        assert not mon._pending_gains
+
+
+class TestFleetHealthRouting:
+    def test_probe_based_healthy_chips_and_mesh(self):
+        from repro.distributed.fault import (
+            elastic_mesh_shape,
+            fleet_mesh_shape,
+            healthy_chips,
+        )
+
+        shapes = [("a", (64, 32))]
+        pl = place_model(shapes, n_chips=3, spares=1,
+                         chunk_rows=64, cols=32)
+        fleet = ChipFleet.for_placement(KEY, pl,
+                                        noise=NoiseConfig())
+        fsnap = calibrate_fleet(fleet, offset_repeats=8, gain_repeats=2)
+        mon = FleetMonitor(fleet, pl, fsnap, probe_repeats=4)
+        assert healthy_chips(mon) == [0, 1, 2]
+        assert fleet_mesh_shape(mon, model_parallel=1,
+                                pod_size=256) == (1, 3, 1)
+        fleet.kill(2)
+        assert healthy_chips(mon) == [0, 1]
+        assert fleet_mesh_shape(mon, model_parallel=1,
+                                pod_size=256) == (1, 2, 1)

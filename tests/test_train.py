@@ -208,9 +208,10 @@ class TestFault:
     def test_elastic_mesh(self):
         from repro.distributed.fault import elastic_mesh_shape
 
+        # one shape contract: always (pods, data_per_pod, model_parallel)
         assert elastic_mesh_shape(512) == (2, 16, 16)
-        assert elastic_mesh_shape(511) == (31, 16)  # lost a chip -> 31 DP
-        assert elastic_mesh_shape(256) == (16, 16)
+        assert elastic_mesh_shape(511) == (1, 31, 16)  # lost a chip: 31 DP
+        assert elastic_mesh_shape(256) == (1, 16, 16)  # single pod
         with pytest.raises(ValueError):
             elastic_mesh_shape(8)
 

@@ -61,7 +61,8 @@ class TestRegistry:
     def test_rules_registered_with_docs_and_tiers(self):
         want_cheap = {"chunk-alignment", "domain-chain", "pack-consistency",
                       "dispatch-count", "group-layout",
-                      "calibration-compat"}
+                      "calibration-compat", "placement-coverage",
+                      "fleet-calibration-compat"}
         want_full = {"drift-swap", "sharding-specs", "packed-layout"}
         assert set(RULES) == want_cheap | want_full
         for r in RULES.values():
